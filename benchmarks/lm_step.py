@@ -1,0 +1,65 @@
+"""LM substrate micro-benchmarks on the host device: smoke-scale train-step
+and decode-step wall times for each arch family (CPU; the production-scale
+numbers are the dry-run roofline bounds)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.train import TrainConfig, make_train_state, make_train_step
+
+ARCHS = ["qwen3-14b", "granite-moe-1b-a400m", "rwkv6-3b", "zamba2-2.7b",
+         "whisper-large-v3"]
+
+
+def _batch(cfg, B, S, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    return batch
+
+
+def rows() -> List[str]:
+    out = []
+    rng = np.random.default_rng(0)
+    for arch in ARCHS:
+        cfg = get_smoke(arch)
+        model = build_model(cfg)
+        state = make_train_state(model, jax.random.key(0))
+        step = jax.jit(make_train_step(model, TrainConfig()))
+        batch = _batch(cfg, 4, 32, rng)
+        state, m = step(state, batch)          # compile + warmup
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(5):
+            state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / 5
+        out.append(f"lm_train_step_{arch},{dt * 1e6:.0f},smoke_cfg")
+
+        params = state["params"]
+        if cfg.family == "encdec":
+            cache = model.init_cache(4, 64, 32)
+        else:
+            cache = model.init_cache(4, 64)
+        tok = jnp.zeros((4, 1), jnp.int32)
+        dec = jax.jit(model.decode_step)
+        _, cache = dec(params, tok, jnp.int32(0), cache)
+        t0 = time.perf_counter()
+        for i in range(1, 6):
+            lg, cache = dec(params, tok, jnp.int32(i), cache)
+        jax.block_until_ready(lg)
+        dt = (time.perf_counter() - t0) / 5
+        out.append(f"lm_decode_step_{arch},{dt * 1e6:.0f},smoke_cfg")
+    return out

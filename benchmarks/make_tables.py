@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run JSONL results.
+
+    PYTHONPATH=src python -m benchmarks.make_tables \
+        results/dryrun_single.jsonl results/dryrun_multi.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import ARCH_IDS, SHAPES, cells
+
+
+def load(path):
+    best = {}
+    try:
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                best[(r["arch"], r["shape"])] = r
+    except FileNotFoundError:
+        pass
+    return best
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def main():
+    single = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.jsonl")
+    multi = load(sys.argv[2] if len(sys.argv) > 2 else "results/dryrun_multi.jsonl")
+
+    print("### §Dry-run (single-pod 16x16 = 256 chips; multi-pod 2x16x16 = 512)\n")
+    print("| arch | shape | kind | note | args/chip | temp/chip | multi-pod |")
+    print("|------|-------|------|------|-----------|-----------|-----------|")
+    for arch, shape, ok, why in cells(include_skips=True):
+        if not ok:
+            print(f"| {arch} | {shape} | — | **skipped**: {why} | — | — | — |")
+            continue
+        r = single.get((arch, shape))
+        m = multi.get((arch, shape))
+        if r is None or r.get("status") != "ok":
+            print(f"| {arch} | {shape} | ? | PENDING | | | |")
+            continue
+        mem = r.get("memory", {})
+        mp = "ok" if (m and m.get("status") == "ok") else "PENDING"
+        print(f"| {arch} | {shape} | {r['kind']} | {r.get('note','')} "
+              f"| {fmt_bytes(mem.get('argument_size_in_bytes'))} "
+              f"| {fmt_bytes(mem.get('temp_size_in_bytes'))} | {mp} |")
+
+    print("\n### §Roofline (single-pod, per chip; v5e: 197TF bf16, 819GB/s HBM, 50GB/s ICI)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | bound | "
+          "useful FLOPs | MFU bound |")
+    print("|------|-------|-----------|----------|--------------|-------|"
+          "--------------|-----------|")
+    for arch, shape, ok, why in cells(include_skips=False):
+        r = single.get((arch, shape))
+        if r is None or r.get("status") != "ok":
+            continue
+        f = r["roofline"]
+        # recompute the collective term with ring-wire weights (all-reduce
+        # moves 2x) from the stored breakdown, so old and new records render
+        # consistently
+        from repro.launch.roofline import ICI_BW, wire_bytes
+        t_coll = wire_bytes(f.get("coll_breakdown", {})) / ICI_BW
+        terms = {"compute": f["t_compute_s"], "memory": f["t_memory_s"],
+                 "collective": t_coll}
+        bound = max(terms, key=terms.get)
+        mfu = f["model_flops"] / (max(terms.values()) * r["chips"] * 197e12) \
+            if max(terms.values()) > 0 else float("nan")
+        print(f"| {arch} | {shape} "
+              f"| {f['t_compute_s']*1e3:.1f}ms | {f['t_memory_s']*1e3:.1f}ms "
+              f"| {t_coll*1e3:.1f}ms | **{bound}** "
+              f"| {f['useful_flops_ratio']*100:.0f}% "
+              f"| {mfu*100:.2f}% |")
+
+
+if __name__ == "__main__":
+    main()

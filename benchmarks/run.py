@@ -1,0 +1,36 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or {"table1", "fig2", "overhead", "roofline", "lm"}
+    print("name,us_per_call,derived")
+    rows = []
+    if "table1" in which:
+        from benchmarks.paper_tables import table1
+        rows += table1()
+    if "fig2" in which:
+        from benchmarks.paper_tables import fig2
+        rows += fig2()
+    if "overhead" in which:
+        from benchmarks.paper_tables import process_overhead
+        rows += process_overhead()
+    if "roofline" in which:
+        from benchmarks.roofline_report import rows as roofline_rows
+        rows += roofline_rows()
+    if "lm" in which:
+        from benchmarks.lm_step import rows as lm_rows
+        rows += lm_rows()
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""MRI reconstruction example — the paper's §IV-A / listings 5-6.
+
+Builds synthetic multicoil cine K-space (16 frames, 8 coils, 160x160,
+matching §IV-B), reconstructs M = sum_i conj(S_i) . IFFT(Y_i) through the
+SimpleMRIRecon process chain, verifies against a pure-numpy oracle, and
+saves the output in the .mat-analogue (npz) container.
+
+Run:  PYTHONPATH=src python examples/mri_recon.py [--fused] [--pallas]
+"""
+import sys
+import time
+
+import numpy as np
+
+from repro.configs.mri_recon import CONFIG
+from repro.core import (CLapp, DeviceTraits, DeviceType, KData, PlatformTraits,
+                        ProfileParameters, SyncSource, XData)
+from repro.processes import SimpleMRIRecon
+
+
+def synthetic_kdata(frames: int, coils: int, h: int, w: int, seed: int = 0):
+    """Phantom: moving ellipse + smooth coil sensitivities -> K-space."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    smaps = np.stack([
+        np.exp(-(((yy - h * (0.2 + 0.6 * c / max(1, coils - 1))) / h) ** 2
+                 + ((xx - w * 0.5) / w) ** 2) * 3.0)
+        * np.exp(1j * 2 * np.pi * c / coils)
+        for c in range(coils)
+    ]).astype(np.complex64)
+    frames_img = []
+    for f in range(frames):
+        cx = w * (0.4 + 0.2 * np.sin(2 * np.pi * f / frames))
+        img = ((xx - cx) ** 2 / (0.1 * w) ** 2
+               + (yy - h * 0.5) ** 2 / (0.2 * h) ** 2 < 1.0).astype(np.float32)
+        img += 0.1 * rng.standard_normal((h, w)).astype(np.float32)
+        frames_img.append(img.astype(np.complex64))
+    imgs = np.stack(frames_img)                       # (F, H, W)
+    coil_imgs = imgs[:, None] * smaps[None]           # (F, C, H, W)
+    kdata = np.fft.fft2(coil_imgs, norm="ortho").astype(np.complex64)
+    return kdata, smaps, imgs
+
+
+def oracle_recon(kdata: np.ndarray, smaps: np.ndarray) -> np.ndarray:
+    x = np.fft.ifft2(kdata, norm="ortho")
+    return (np.conj(smaps)[None] * x).sum(axis=1)
+
+
+def main() -> None:
+    mode = "fused" if "--fused" in sys.argv else "staged"
+    use_pallas = "--pallas" in sys.argv
+    cfg = CONFIG
+
+    app = CLapp()
+    # select the CPU device explicitly, as in listing 5
+    traits = DeviceTraits(type=DeviceType.CPU)
+    app.init(PlatformTraits(), traits)
+    app.loadKernels(["complex_elementprod", "coil_combine"])
+
+    kdata, smaps, _ = synthetic_kdata(cfg.frames, cfg.coils, cfg.height, cfg.width)
+    data_in = KData({"kdata": kdata, "sensitivity_maps": smaps})
+    data_out = XData({"xdata": np.zeros(data_in.x_shape(), np.complex64)})
+
+    h_in = app.addData(data_in)      # sends to device in one call
+    h_out = app.addData(data_out)
+
+    proc = SimpleMRIRecon(app, mode=mode, use_pallas=use_pallas)
+    proc.set_in_handle(h_in)
+    proc.set_out_handle(h_out)
+
+    t0 = time.perf_counter()
+    proc.init()                       # "plan baking": trace + XLA compile
+    t_init = time.perf_counter() - t0
+
+    prof = ProfileParameters(enable=True)
+    proc.launch(prof)                 # hot path
+    print(f"[{mode}] init {t_init * 1e3:.1f} ms, "
+          f"launch {prof.samples[-1] * 1e3:.3f} ms")
+
+    app.device2Host(h_out, SyncSource.BUFFER_ONLY)
+    recon = data_out.get_ndarray(0).host
+
+    want = oracle_recon(kdata, smaps)
+    np.testing.assert_allclose(recon, want, rtol=1e-4, atol=1e-4)
+    print("reconstruction verified against numpy oracle")
+
+    data_out.matlab_save("outputFrames.npz", "XData", SyncSource.HOST_ONLY)
+    print("saved outputFrames.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving example: batched generation with continuous batching.
+
+Trains nothing — initializes a small qwen3-family model, submits a queue of
+prompts larger than the batch width, and drives the ServeEngine: prefill on
+slot admission, one compiled decode step per token for all active slots
+(the paper's init/launch split: the decode executable compiles once).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.serve import SamplingConfig, ServeEngine
+
+
+def main() -> None:
+    cfg = get_smoke("qwen3-14b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+
+    engine = ServeEngine(
+        model, params, batch=4, max_len=64,
+        sampling=SamplingConfig(temperature=0.8, top_k=20, max_new_tokens=16))
+
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, size=rng.integers(3, 10)))
+               for _ in range(10)]
+    for p in prompts:
+        engine.submit(p)
+
+    t0 = time.perf_counter()
+    outputs = engine.run()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(o) for o in outputs)
+    print(f"served {len(prompts)} requests through 4 slots: "
+          f"{total_tokens} tokens in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")
+    for i, o in enumerate(outputs[:4]):
+        print(f"  request {i}: {len(o)} tokens -> {o[:8]}...")
+    assert all(len(o) > 0 for o in outputs)
+    print("all requests completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""repro.core — the paper's contribution as a composable JAX module.
+
+Public API mirrors OpenCLIPER's class names (CLapp, Data, XData, KData,
+NDArray, Process) with JAX/TPU semantics.  See DESIGN.md §2 for the mapping.
+"""
+from .app import (
+    CLapp,
+    CLIPERApp,
+    DataHandle,
+    DeviceTraits,
+    DeviceType,
+    INVALID_HANDLE,
+    NoMatchingDeviceError,
+    PlatformTraits,
+)
+from .arena import (
+    ALIGN,
+    ArenaEntry,
+    ArenaLayout,
+    device_view,
+    pack_device,
+    pack_host,
+    pack_tree_host,
+    plan_layout,
+    unpack_device,
+    unpack_host,
+    unpack_tree_host,
+)
+from .data import Data, KData, NDArray, XData
+from .process import (
+    Process,
+    ProcessChain,
+    ProfileParameters,
+    aot_compile,
+    compile_cache_stats,
+)
+from .registry import KernelCompileError, KernelEntry, KernelRegistry, kernel
+from .sync import Coherence, SyncSource
+
+__all__ = [
+    "ALIGN", "ArenaEntry", "ArenaLayout", "CLapp", "CLIPERApp", "Coherence",
+    "Data", "DataHandle", "DeviceTraits", "DeviceType", "INVALID_HANDLE",
+    "KData", "KernelCompileError", "KernelEntry", "KernelRegistry", "NDArray",
+    "NoMatchingDeviceError", "PlatformTraits", "Process", "ProcessChain",
+    "ProfileParameters", "SyncSource", "XData", "aot_compile",
+    "compile_cache_stats", "device_view", "kernel", "pack_device", "pack_host",
+    "pack_tree_host", "plan_layout", "unpack_device", "unpack_host",
+    "unpack_tree_host",
+]

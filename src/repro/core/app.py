@@ -1,0 +1,190 @@
+"""CLapp — the application/device-management object (paper §III-B).
+
+Owns: device discovery & selection by traits, the data registry
+(handle -> Data, device-resident arena blobs), the kernel registry, and the
+optional device mesh for distributed execution.  This is the single place
+where "housekeeping" lives, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .data import Data
+from .registry import KernelRegistry
+from .sync import Coherence, SyncSource
+
+DataHandle = int
+INVALID_HANDLE: DataHandle = -1
+
+
+class DeviceType(enum.Enum):
+    ANY = "any"
+    CPU = "cpu"
+    GPU = "gpu"
+    TPU = "tpu"
+
+
+# Paper-style aliases (CLapp::DEVICE_TYPE_CPU etc.)
+DEVICE_TYPE_ANY = DeviceType.ANY
+DEVICE_TYPE_CPU = DeviceType.CPU
+DEVICE_TYPE_GPU = DeviceType.GPU
+DEVICE_TYPE_TPU = DeviceType.TPU
+
+
+@dataclasses.dataclass
+class PlatformTraits:
+    """Selection criteria for the OpenCL *platform* — in JAX terms, the
+    backend ('cpu', 'gpu', 'tpu')."""
+
+    name: Optional[str] = None          # backend name; None = default backend
+    version: Optional[str] = None       # accepted for API parity; unused
+
+
+@dataclasses.dataclass
+class DeviceTraits:
+    """Selection criteria for the computing device(s)."""
+
+    type: DeviceType = DeviceType.ANY
+    index: Optional[int] = None          # pick the i-th matching device
+    min_count: int = 1                   # need at least this many devices
+    count: Optional[int] = None          # use exactly this many (None = all)
+
+
+class NoMatchingDeviceError(RuntimeError):
+    pass
+
+
+class CLapp:
+    """Main framework object.  ``init`` selects devices in a single call
+    (paper §III-A.1a); ``addData`` registers + transfers a Data set in a
+    single call (§III-A.2a); ``loadKernels`` builds kernels (§III-A.3a)."""
+
+    def __init__(self):
+        self._devices: List[jax.Device] = []
+        self._mesh: Optional[jax.sharding.Mesh] = None
+        self._data: Dict[DataHandle, Data] = {}
+        self._next_handle: DataHandle = 0
+        self.kernels = KernelRegistry()
+        self._initialized = False
+
+    # ------------------------------------------------------------------ init
+    def init(self, platform_traits: PlatformTraits | None = None,
+             device_traits: DeviceTraits | None = None) -> "CLapp":
+        platform_traits = platform_traits or PlatformTraits()
+        device_traits = device_traits or DeviceTraits()
+
+        backend = platform_traits.name
+        if backend is None and device_traits.type not in (DeviceType.ANY,):
+            backend = device_traits.type.value
+        try:
+            devices = jax.devices(backend) if backend else jax.devices()
+        except RuntimeError as e:
+            raise NoMatchingDeviceError(
+                f"no devices for platform traits {platform_traits}: {e}"
+            ) from e
+
+        if device_traits.type not in (DeviceType.ANY,):
+            devices = [d for d in devices if d.platform == device_traits.type.value]
+        if device_traits.index is not None:
+            if device_traits.index >= len(devices):
+                raise NoMatchingDeviceError(
+                    f"device index {device_traits.index} out of range ({len(devices)} found)"
+                )
+            devices = [devices[device_traits.index]]
+        if len(devices) < device_traits.min_count:
+            raise NoMatchingDeviceError(
+                f"need >= {device_traits.min_count} devices, found {len(devices)}"
+            )
+        if device_traits.count is not None:
+            devices = devices[: device_traits.count]
+
+        self._devices = devices
+        self._initialized = True
+        return self
+
+    @property
+    def devices(self) -> List[jax.Device]:
+        if not self._initialized:
+            raise RuntimeError("CLapp.init() has not been called")
+        return self._devices
+
+    @property
+    def device(self) -> jax.Device:
+        return self.devices[0]
+
+    # ------------------------------------------------------------------ mesh
+    def set_mesh(self, mesh: jax.sharding.Mesh) -> None:
+        self._mesh = mesh
+
+    @property
+    def mesh(self) -> Optional[jax.sharding.Mesh]:
+        return self._mesh
+
+    # ----------------------------------------------------------------- kernels
+    def loadKernels(self, modules: str | Sequence[str]) -> List[str]:
+        return self.kernels.load(modules)
+
+    def getKernel(self, name: str):
+        return self.kernels.get(name)
+
+    # ------------------------------------------------------------------- data
+    def addData(self, data: Data, to_device: bool = True) -> DataHandle:
+        """Register a Data set; packs it into one arena blob and transfers it
+        to the device in a single call.  Spec-only Data (no host values) gets
+        a zero-initialised device blob of the right layout."""
+        handle = self._next_handle
+        self._next_handle += 1
+        self._data[handle] = data
+        if to_device:
+            self.host2device(handle)
+        return handle
+
+    def getData(self, handle: DataHandle) -> Data:
+        try:
+            return self._data[handle]
+        except KeyError:
+            raise KeyError(f"invalid data handle {handle}") from None
+
+    def delData(self, handle: DataHandle) -> None:
+        data = self._data.pop(handle, None)
+        if data is not None:
+            data.device_blob = None  # drop device reference
+
+    def host2device(self, handle: DataHandle) -> None:
+        data = self.getData(handle)
+        if data.layout is None:
+            data.plan()
+        if all(a.host is not None for a in data):
+            blob = data.pack_host()
+            coherence = Coherence.IN_SYNC
+        else:
+            blob = np.zeros(data.layout.total_bytes, dtype=np.uint8)
+            coherence = Coherence.DEVICE_FRESH
+        data.device_blob = jax.device_put(blob, self.device)
+        data.coherence = coherence
+
+    def device2Host(self, handle: DataHandle,
+                    sync: SyncSource = SyncSource.BUFFER_ONLY) -> None:
+        data = self.getData(handle)
+        if sync is SyncSource.HOST_ONLY:
+            return  # host already authoritative
+        data.sync_to_host()
+
+    # internal: processes replace a Data's device blob after computing
+    def _set_device_blob(self, handle: DataHandle, blob: jax.Array) -> None:
+        data = self.getData(handle)
+        data.device_blob = blob
+        data.coherence = Coherence.DEVICE_FRESH
+
+    @property
+    def data_handles(self) -> List[DataHandle]:
+        return sorted(self._data)
+
+
+# Alias used throughout the repo docs
+CLIPERApp = CLapp

@@ -1,0 +1,234 @@
+"""Contiguous, aligned packing of heterogeneous array sets (paper §III-A.2).
+
+OpenCLIPER guarantees that *"a single data set is always aligned and
+contiguous, even though it is highly heterogeneous"* and that data objects
+are *"transferred in a single call"* using pinned memory.  The TPU/JAX
+adaptation is the **arena**: a set of N-D arrays of arbitrary shapes and
+dtypes is packed into one contiguous byte blob with a predictable,
+128-byte-aligned offset table.  One blob means
+
+* one ``jax.device_put`` (the single-call transfer; fewer, larger DMAs is
+  the TPU analogue of pinned-memory streaming),
+* one contiguous write per checkpoint shard (see ``repro.ckpt``),
+* one fused all-reduce over a whole gradient set instead of per-tensor
+  collectives (used by the DP optimizer path).
+
+The offset table is the analogue of OpenCLIPER's on-device position/size
+table that its OpenCL kernels read; here host code slices views out of the
+blob (zero-copy on host; lazily sliced+bitcast on device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Iterable, List, Mapping, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ALIGN = 128  # bytes; TPU lane width (128 x f32) and a safe DMA alignment
+
+
+def _round_up(n: int, align: int = ALIGN) -> int:
+    return (n + align - 1) // align * align
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaEntry:
+    """Placement of one logical array inside the arena blob."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str           # numpy dtype name, e.g. "float32", "bfloat16"
+    offset: int          # byte offset into the blob (ALIGN-aligned)
+    nbytes: int          # payload bytes (not including alignment padding)
+
+    @property
+    def np_dtype(self) -> np.dtype:
+        return np.dtype(jnp.dtype(self.dtype))
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaLayout:
+    """Immutable offset table for a packed arena."""
+
+    entries: Tuple[ArenaEntry, ...]
+    total_bytes: int
+
+    def __post_init__(self):
+        names = [e.name for e in self.entries]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate names in arena layout")
+
+    @property
+    def names(self) -> List[str]:
+        return [e.name for e in self.entries]
+
+    def entry(self, name: str) -> ArenaEntry:
+        for e in self.entries:
+            if e.name == name:
+                return e
+        raise KeyError(name)
+
+    # -- (de)serialisation: the checkpoint metadata format ------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "total_bytes": self.total_bytes,
+                "entries": [dataclasses.asdict(e) for e in self.entries],
+            }
+        )
+
+    @staticmethod
+    def from_json(text: str) -> "ArenaLayout":
+        obj = json.loads(text)
+        entries = tuple(
+            ArenaEntry(
+                name=e["name"],
+                shape=tuple(e["shape"]),
+                dtype=e["dtype"],
+                offset=e["offset"],
+                nbytes=e["nbytes"],
+            )
+            for e in obj["entries"]
+        )
+        return ArenaLayout(entries=entries, total_bytes=obj["total_bytes"])
+
+
+def plan_layout(specs: Iterable[Tuple[str, Sequence[int], Any]]) -> ArenaLayout:
+    """Compute an aligned layout for ``(name, shape, dtype)`` specs.
+
+    Placement is in the given order (predictable — the paper's requirement),
+    each entry rounded up to ``ALIGN`` bytes.
+    """
+    entries: List[ArenaEntry] = []
+    offset = 0
+    for name, shape, dtype in specs:
+        nd = np.dtype(jnp.dtype(dtype))
+        nbytes = int(np.prod(shape, dtype=np.int64)) * nd.itemsize if len(tuple(shape)) else nd.itemsize
+        nbytes = int(np.prod(tuple(shape), dtype=np.int64)) * nd.itemsize
+        entries.append(
+            ArenaEntry(name=str(name), shape=tuple(int(s) for s in shape),
+                       dtype=jnp.dtype(dtype).name, offset=offset, nbytes=int(nbytes))
+        )
+        offset += _round_up(max(int(nbytes), 1))
+    return ArenaLayout(entries=tuple(entries), total_bytes=offset)
+
+
+# ---------------------------------------------------------------------------
+# Host-side pack / unpack (numpy, zero-copy views on unpack)
+# ---------------------------------------------------------------------------
+
+def _as_numpy(x) -> np.ndarray:
+    if isinstance(x, np.ndarray):
+        return x
+    return np.asarray(x)
+
+
+def pack_host(arrays: Mapping[str, Any], layout: ArenaLayout | None = None) -> Tuple[np.ndarray, ArenaLayout]:
+    """Pack named host arrays into one contiguous uint8 blob."""
+    if layout is None:
+        layout = plan_layout(
+            (name, _as_numpy(a).shape, _as_numpy(a).dtype) for name, a in arrays.items()
+        )
+    blob = np.zeros(layout.total_bytes, dtype=np.uint8)
+    for e in layout.entries:
+        a = _as_numpy(arrays[e.name])
+        if tuple(a.shape) != e.shape:
+            raise ValueError(f"{e.name}: shape {a.shape} != layout {e.shape}")
+        want = np.dtype(jnp.dtype(e.dtype))
+        if a.dtype != want:
+            a = a.astype(want)
+        raw = np.ascontiguousarray(a).view(np.uint8).reshape(-1)
+        blob[e.offset : e.offset + e.nbytes] = raw
+    return blob, layout
+
+
+def unpack_host(blob: np.ndarray, layout: ArenaLayout) -> Dict[str, np.ndarray]:
+    """Zero-copy views of each entry out of a host blob."""
+    out: Dict[str, np.ndarray] = {}
+    for e in layout.entries:
+        raw = blob[e.offset : e.offset + e.nbytes]
+        out[e.name] = raw.view(np.dtype(jnp.dtype(e.dtype))).reshape(e.shape)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Device-side unpack (lazy slice + bitcast inside jit; no host round trip)
+# ---------------------------------------------------------------------------
+
+def device_view(blob: jax.Array, entry: ArenaEntry) -> jax.Array:
+    """Slice one logical array out of a device-resident uint8 arena blob.
+
+    Works under ``jit``; the compiler folds the slice+bitcast into the
+    consumer so chained Processes read the arena in place (zero copy).
+    ``bitcast_convert_type`` rejects bool/complex, so those are routed
+    through uint8 / interleaved float pairs (matching numpy memory layout).
+    """
+    dt = jnp.dtype(entry.dtype)
+    raw = jax.lax.dynamic_slice_in_dim(blob, entry.offset, entry.nbytes, axis=0)
+
+    def _bitcast(r, target):
+        item = np.dtype(target).itemsize
+        if item > 1:
+            r = r.reshape((-1, item))
+        return jax.lax.bitcast_convert_type(r, target)
+
+    if dt == jnp.bool_:
+        arr = _bitcast(raw, jnp.uint8) != 0
+    elif jnp.issubdtype(dt, jnp.complexfloating):
+        real_dt = jnp.float32 if dt == jnp.complex64 else jnp.float64
+        pairs = _bitcast(raw, real_dt).reshape((-1, 2))
+        arr = jax.lax.complex(pairs[:, 0], pairs[:, 1]).astype(dt)
+    else:
+        arr = _bitcast(raw, dt)
+    return arr.reshape(entry.shape)
+
+
+def unpack_device(blob: jax.Array, layout: ArenaLayout) -> Dict[str, jax.Array]:
+    return {e.name: device_view(blob, e) for e in layout.entries}
+
+
+def pack_device(arrays: Mapping[str, jax.Array], layout: ArenaLayout) -> jax.Array:
+    """Pack device arrays into a uint8 blob (jit-compatible)."""
+    blob = jnp.zeros((layout.total_bytes,), dtype=jnp.uint8)
+    for e in layout.entries:
+        dt = jnp.dtype(e.dtype)
+        a = arrays[e.name].astype(dt).reshape(-1)
+        if dt == jnp.bool_:
+            a = a.astype(jnp.uint8)
+        elif jnp.issubdtype(dt, jnp.complexfloating):
+            real_dt = jnp.float32 if dt == jnp.complex64 else jnp.float64
+            a = jnp.stack([jnp.real(a), jnp.imag(a)], axis=-1).astype(real_dt).reshape(-1)
+        raw = jax.lax.bitcast_convert_type(a, jnp.uint8)
+        raw = raw.reshape(-1)
+        blob = jax.lax.dynamic_update_slice_in_dim(blob, raw, e.offset, axis=0)
+    return blob
+
+
+# ---------------------------------------------------------------------------
+# Pytree arenas: pack any pytree of arrays (used by repro.ckpt)
+# ---------------------------------------------------------------------------
+
+def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        out.append((name, leaf))
+    return out
+
+
+def pack_tree_host(tree) -> Tuple[np.ndarray, ArenaLayout]:
+    named = dict(_flatten_with_names(tree))
+    return pack_host(named)
+
+
+def unpack_tree_host(blob: np.ndarray, layout: ArenaLayout, treedef_like):
+    """Restore a pytree with the structure of ``treedef_like`` from a blob."""
+    named = unpack_host(blob, layout)
+    flat = _flatten_with_names(treedef_like)
+    leaves = [named[name] for name, _ in flat]
+    _, treedef = jax.tree_util.tree_flatten(treedef_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

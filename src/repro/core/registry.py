@@ -1,0 +1,104 @@
+"""Kernel registry (paper §III-A.3a: automatic kernel loading, indexed by name).
+
+OpenCLIPER compiles ``.cl`` sources at run time and indexes kernels by name.
+The JAX adaptation: kernel *modules* under :mod:`repro.kernels` register
+their entry points with :func:`kernel`; ``CLIPERApp.loadKernels`` imports the
+modules (the analogue of compiling the source files) and surfaces any error
+with the module's "build log" (the traceback).  Each kernel may declare a
+pure-jnp reference oracle, used by the test suite exactly like the paper's
+CPU/GPU result cross-checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class KernelEntry:
+    name: str
+    fn: Callable[..., Any]          # jit-able callable (Pallas wrapper or jnp)
+    ref: Optional[Callable[..., Any]] = None  # pure-jnp oracle
+    module: str = ""
+    doc: str = ""
+
+
+class KernelCompileError(RuntimeError):
+    """Raised when a kernel module fails to import; carries the build log."""
+
+    def __init__(self, module: str, log: str):
+        super().__init__(f"kernel module {module!r} failed to build:\n{log}")
+        self.module = module
+        self.log = log
+
+
+_GLOBAL: Dict[str, KernelEntry] = {}
+
+
+def kernel(name: str, ref: Callable[..., Any] | None = None):
+    """Decorator: register ``fn`` as a named kernel entry point."""
+
+    def deco(fn: Callable[..., Any]):
+        _GLOBAL[name] = KernelEntry(
+            name=name, fn=fn, ref=ref, module=fn.__module__, doc=(fn.__doc__ or "").strip()
+        )
+        return fn
+
+    return deco
+
+
+class KernelRegistry:
+    """Per-app view over the global kernel table."""
+
+    def __init__(self):
+        self._loaded: Dict[str, KernelEntry] = {}
+
+    def load(self, modules: str | Sequence[str]) -> List[str]:
+        """Import kernel modules and index their kernels (one call, many
+        files — paper §III-A.3a).  ``modules`` are names relative to
+        ``repro.kernels`` (e.g. ``"negate"``) or absolute dotted paths."""
+        if isinstance(modules, str):
+            modules = [modules]
+        added: List[str] = []
+        for mod in modules:
+            mod = mod.removesuffix(".cl").removesuffix(".py")  # paper-style names OK
+            qualified = mod if "." in mod else f"repro.kernels.{mod}"
+            before = set(_GLOBAL)
+            try:
+                importlib.import_module(qualified)
+            except Exception:
+                raise KernelCompileError(qualified, traceback.format_exc())
+            for name in set(_GLOBAL) - before:
+                self._loaded[name] = _GLOBAL[name]
+                added.append(name)
+            # re-loading a module registers nothing new; pick up its kernels
+            for name, entry in _GLOBAL.items():
+                if entry.module == qualified:
+                    self._loaded.setdefault(name, entry)
+                    if name not in added:
+                        added.append(name)
+        return added
+
+    def get(self, name: str) -> Callable[..., Any]:
+        return self.entry(name).fn
+
+    def ref(self, name: str) -> Callable[..., Any]:
+        e = self.entry(name)
+        if e.ref is None:
+            raise KeyError(f"kernel {name!r} has no reference oracle")
+        return e.ref
+
+    def entry(self, name: str) -> KernelEntry:
+        if name in self._loaded:
+            return self._loaded[name]
+        if name in _GLOBAL:  # registered by a direct import
+            return _GLOBAL[name]
+        raise KeyError(
+            f"kernel {name!r} not loaded; available: {sorted(set(self._loaded) | set(_GLOBAL))}"
+        )
+
+    @property
+    def names(self) -> List[str]:
+        return sorted(set(self._loaded) | set(_GLOBAL))

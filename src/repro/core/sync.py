@@ -1,0 +1,43 @@
+"""Host/device coherence tracking (OpenCLIPER's ``SyncSource``).
+
+OpenCLIPER lets the caller state which copy of a Data object is
+authoritative when transferring (``BUFFER_ONLY`` = device buffer,
+``HOST_ONLY`` = host memory).  JAX hides explicit transfers, but the same
+bookkeeping matters: a :class:`~repro.core.data.Data` object may hold a host
+(numpy) copy, a device (jax.Array) copy, or both, and the two can go stale
+relative to one another after a Process writes the device side.
+"""
+from __future__ import annotations
+
+import enum
+
+
+class SyncSource(enum.Enum):
+    """Which side of a Data object is authoritative."""
+
+    AUTO = 0         # framework picks whichever copy is marked fresh
+    BUFFER_ONLY = 1  # device buffer is authoritative (paper's BUFFER_ONLY)
+    HOST_ONLY = 2    # host memory is authoritative
+
+
+class Coherence(enum.Enum):
+    """Freshness state of the (host, device) pair backing a Data object."""
+
+    HOST_FRESH = "host"        # host copy newer (or device absent)
+    DEVICE_FRESH = "device"    # device copy newer (or host absent)
+    IN_SYNC = "sync"           # both copies identical
+    EMPTY = "empty"            # no storage attached yet
+
+
+def resolve_source(sync: SyncSource, coherence: Coherence) -> str:
+    """Return ``"host"`` or ``"device"``: where to read authoritative data."""
+    if sync is SyncSource.BUFFER_ONLY:
+        return "device"
+    if sync is SyncSource.HOST_ONLY:
+        return "host"
+    # AUTO
+    if coherence in (Coherence.DEVICE_FRESH, Coherence.IN_SYNC):
+        return "device"
+    if coherence is Coherence.HOST_FRESH:
+        return "host"
+    raise ValueError("Data object has no storage to synchronise from")

@@ -1,0 +1,90 @@
+"""Training data pipeline.
+
+Production layout: each data-parallel host owns a deterministic shard of an
+(infinite, seeded) token stream — ``TokenStream(shard_id, n_shards)`` — and
+batches are assembled host-side then ``jax.device_put`` with the batch
+sharding.  The synthetic stream is a seeded Zipf-ish mixture that is fully
+reproducible given (seed, shard, step): restart/elastic-rescale replays the
+exact same sequence, which the fault-tolerance tests rely on.
+
+A file-backed corpus (tokenized ``.npz`` via ``repro.data.io``) plugs in
+through the same interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StreamConfig:
+    vocab: int
+    seq: int
+    batch: int                 # per-shard batch
+    seed: int = 0
+    kind: str = "lm"           # lm | vlm | encdec
+    n_patches: int = 0         # vlm
+    d_model: int = 0           # vlm/encdec stub embedding width
+    enc_frames: int = 0        # encdec
+
+
+class TokenStream:
+    """Deterministic, restartable synthetic token stream."""
+
+    def __init__(self, cfg: StreamConfig, shard_id: int = 0, n_shards: int = 1):
+        self.cfg = cfg
+        self.shard_id = shard_id
+        self.n_shards = n_shards
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            (self.cfg.seed * 1_000_003 + self.shard_id) * 1_000_003 + step)
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """The batch for a given global step (pure function of step)."""
+        cfg = self.cfg
+        rng = self._rng(step)
+        # zipf-flavoured token draw bounded to vocab
+        toks = rng.zipf(1.3, size=(cfg.batch, cfg.seq + 1)).astype(np.int64)
+        toks = (toks - 1) % cfg.vocab
+        batch = {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+        if cfg.kind == "vlm":
+            batch["patch_embeds"] = rng.standard_normal(
+                (cfg.batch, cfg.n_patches, cfg.d_model)).astype(np.float32)
+        if cfg.kind == "encdec":
+            batch["frames"] = rng.standard_normal(
+                (cfg.batch, cfg.enc_frames, cfg.d_model)).astype(np.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class FileCorpus:
+    """Token corpus stored as npz arrays {'tokens': (N,) int32}; serves
+    fixed-length windows, sharded round-robin over hosts."""
+
+    def __init__(self, path: str, seq: int, batch: int,
+                 shard_id: int = 0, n_shards: int = 1):
+        from . import io as repro_io
+        self.tokens = repro_io.load_any(path)["tokens"].astype(np.int32)
+        self.seq, self.batch = seq, batch
+        self.shard_id, self.n_shards = shard_id, n_shards
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        n = len(self.tokens) - self.seq - 1
+        idx0 = (step * self.n_shards + self.shard_id) * self.batch
+        rows = []
+        for b in range(self.batch):
+            off = ((idx0 + b) * self.seq) % max(1, n)
+            rows.append(self.tokens[off : off + self.seq + 1])
+        toks = np.stack(rows)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

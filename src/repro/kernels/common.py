@@ -1,0 +1,53 @@
+"""Shared helpers for Pallas TPU kernels.
+
+All kernels target TPU (``pl.pallas_call`` + explicit ``BlockSpec`` VMEM
+tiling) and are *validated* on CPU in interpret mode — the kernel body runs
+in Python with the same blocking/grid semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large-negative float32 used instead of -inf so fully-masked rows degrade to
+# finite garbage (they only occur in padding, which wrappers slice away)
+# instead of NaN-poisoning the accumulator.
+NEG_INF = -1.0e30
+
+# TPU tiling constants: MXU is 128x128, VPU lanes are 8x128.
+LANE = 128
+SUBLANE = 8
+
+
+def interpret_mode() -> bool:
+    """Pallas must interpret on non-TPU backends; real lowering on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def pad_dim(x: jax.Array, axis: int, target: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to length ``target``."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - cur)
+    return jnp.pad(x, pads)
+
+
+def split_complex(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Complex -> (re, im) float pair (TPU Pallas has no complex dtype)."""
+    if jnp.iscomplexobj(x):
+        return jnp.real(x), jnp.imag(x)
+    return x, jnp.zeros_like(x)
+
+
+def merge_complex(re: jax.Array, im: jax.Array) -> jax.Array:
+    return jax.lax.complex(re.astype(jnp.float32), im.astype(jnp.float32))

@@ -1,0 +1,143 @@
+"""Flash attention Pallas kernel (TPU-native tiling, online softmax).
+
+The GPU flash-attention algorithm is ADAPTED to TPU per DESIGN.md §2: no
+warp-level shuffles or shared-memory banking — instead, MXU-shaped
+(128-aligned) q/k/v VMEM tiles, a sequential kv-block grid dimension whose
+partial softmax state (m, l, acc) persists in VMEM scratch across grid
+steps, and `pl.when`-guarded block skipping for causal/sliding-window masks
+(the TPU analogue of CUDA's early block exit).
+
+Supports GQA (kv-head sharing via the k/v BlockSpec index map), causal
+masking, sliding windows (h2o-danube) and decode (Sq == 1 against a long KV
+cache) in one kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.registry import kernel
+from . import ref
+from .common import LANE, NEG_INF, SUBLANE, interpret_mode, pad_dim, round_up
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_k: int, q_len: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # query positions are aligned to the END of the kv sequence (decode-safe)
+    offset = kv_len - q_len
+    q_start = qi * block_q + offset
+    k_start = ki * block_k
+
+    # block-level relevance: skip fully-masked tiles (compute never happens)
+    run = k_start < kv_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        # keys strictly below every query's window never contribute
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                   # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                       # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l <= 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k"),
+)
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+
+    Pads Sq/Skv to block multiples (padding keys are masked by the kv_len
+    bound; padding query rows are sliced away) and launches a
+    (B, Hq, nq, nk) grid.  kv blocks iterate in the minor grid dimension so
+    the online-softmax scratch carries across them.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, dk = k.shape
+    assert hq % hkv == 0 and dk == d, (q.shape, k.shape)
+    group = hq // hkv
+    if scale is None:
+        scale = float(d) ** -0.5
+
+    bq = max(SUBLANE, min(block_q, round_up(sq, SUBLANE)))
+    bk = max(SUBLANE, min(block_k, round_up(skv, SUBLANE)))
+    sqp, skvp = round_up(sq, bq), round_up(skv, bk)
+    qp = pad_dim(q, 2, sqp)
+    kp = pad_dim(k, 2, skvp)
+    vp = pad_dim(v, 2, skvp)
+
+    grid = (b, hq, sqp // bq, skvp // bk)
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, d),
+                           lambda bi, hi, qi, ki: (bi, hi // group, ki, 0))
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            block_q=bq, block_k=bk, q_len=sq, kv_len=skv,
+        ),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret_mode(),
+    )(qp, kp, vp)
+    return out[:, :, :sq, :]
+
+
+kernel("flash_attention", ref=ref.attention)(flash_attention)

@@ -1,0 +1,45 @@
+"""Negate (intensity inversion) Pallas kernel — the paper's listing 4.
+
+``output[i] = 1.0 - input[i]``, blocked over VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.registry import kernel
+from . import ref
+from .common import LANE, SUBLANE, interpret_mode, pad_dim, round_up
+
+DEFAULT_BLOCK = 64 * LANE  # 8192 elements = 32 KiB f32 per tile
+
+
+def _negate_kernel(x_ref, o_ref):
+    o_ref[...] = (1.0 - x_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def negate(x: jax.Array, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """jit'd wrapper: flattens, pads to a block multiple, tiles over a 1-D
+    grid, unpads.  Matches ``ref.negate`` bit-for-bit in f32."""
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block = min(block, round_up(max(n, 1), LANE))
+    padded = round_up(max(n, 1), block)
+    flat = pad_dim(flat, 0, padded)
+    out = pl.pallas_call(
+        _negate_kernel,
+        grid=(padded // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), dtype),
+        interpret=interpret_mode(),
+    )(flat)
+    return out[:n].reshape(shape)
+
+
+kernel("negate_kernel", ref=ref.negate)(negate)

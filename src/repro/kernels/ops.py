@@ -1,0 +1,17 @@
+"""Aggregated jit'd kernel wrappers (the framework's "loadKernels" surface).
+
+Importing this module registers every kernel in the global registry;
+``CLapp.loadKernels([...])`` imports the individual modules on demand
+instead (one call, many files — paper §III-A.3a).
+"""
+from .coil_combine import rss, ximage_sum
+from .complex_elementprod import complex_elementprod
+from .flash_attention import flash_attention
+from .negate import negate
+from .rmsnorm import rmsnorm
+from .wkv6 import wkv6
+
+__all__ = [
+    "complex_elementprod", "flash_attention", "negate", "rmsnorm", "rss",
+    "wkv6", "ximage_sum",
+]

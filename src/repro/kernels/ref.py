@@ -1,0 +1,169 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the kernels are validated against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose) and
+the path used by the dry-run models (XLA cost_analysis needs real HLO ops,
+not opaque custom calls).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def negate(x: jax.Array) -> jax.Array:
+    """Paper listing 4: ``output[i] = 1.0 - input[i]`` (intensity inversion)."""
+    return (1.0 - x).astype(x.dtype)
+
+
+def complex_elementprod(a: jax.Array, b: jax.Array, conjugate_b: bool = False) -> jax.Array:
+    """Elementwise complex product, optionally conjugating ``b``
+    (paper §IV-A: multiply x-images by conj(sensitivity maps))."""
+    if conjugate_b:
+        b = jnp.conj(b)
+    return a * b
+
+
+def ximage_sum(x: jax.Array, axis: int = -3) -> jax.Array:
+    """Sum of per-coil x-images over the coil axis (paper §IV-A step 2)."""
+    return jnp.sum(x, axis=axis)
+
+
+def rss(x: jax.Array, axis: int = -3) -> jax.Array:
+    """Root-sum-of-squares coil combination (paper §IV-B)."""
+    mag2 = jnp.real(x) ** 2 + jnp.imag(x) ** 2 if jnp.iscomplexobj(x) else x * x
+    return jnp.sqrt(jnp.sum(mag2, axis=axis))
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMS layer norm over the last axis (LM hot path)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+#: sequences at least this long take the q-chunked path (bounded memory).
+#: NOTE: the chunked path is a lax.scan, whose body XLA's cost_analysis
+#: counts ONCE (trip count ignored).  The dry-run's analysis compiles set
+#: the threshold to infinity (full unchunked attention — correct flops,
+#: shapes abstract so memory is irrelevant); the runnable compiles keep it.
+ATTN_CHUNK_THRESHOLD = 4096
+ATTN_CHUNK = 1024
+
+
+class unchunked_attention:
+    """Context manager: disable q-chunking (cost-analysis compiles)."""
+
+    def __enter__(self):
+        global ATTN_CHUNK_THRESHOLD
+        self._old = ATTN_CHUNK_THRESHOLD
+        ATTN_CHUNK_THRESHOLD = 1 << 62
+        return self
+
+    def __exit__(self, *exc):
+        global ATTN_CHUNK_THRESHOLD
+        ATTN_CHUNK_THRESHOLD = self._old
+        return False
+
+
+def _attend_block(qf, kf, vf, q_off, causal, window, skv, logit_cap):
+    """One q-block of attention.  qf: (B,H,Cq,D) pre-scaled f32."""
+    cq = qf.shape[2]
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if logit_cap is not None:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    q_pos = q_off + jnp.arange(cq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((cq, skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+              window: int | None = None, scale: float | None = None,
+              logit_cap: float | None = None) -> jax.Array:
+    """Multi-head attention oracle with GQA, causal and sliding-window masks.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+    ``window`` = sliding-window size (attend to keys in (i-window, i]).
+    Query position i is aligned to the END of the key sequence
+    (i_global = i + Skv - Sq), which covers both training (Sq == Skv) and
+    single-token decode (Sq == 1).
+
+    Long sequences scan over q-chunks so the logits buffer is
+    (B, H, chunk, Skv) instead of (B, H, Sq, Skv) — the pure-XLA analogue of
+    flash attention's bounded working set (the Pallas kernel is the real
+    thing; this path is what the dry-run lowers).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if group > 1:
+        kf = jnp.repeat(kf, group, axis=1)
+        vf = jnp.repeat(vf, group, axis=1)
+
+    offset = skv - sq
+    if sq < ATTN_CHUNK_THRESHOLD or sq % ATTN_CHUNK != 0:
+        out = _attend_block(qf, kf, vf, offset, causal, window, skv, logit_cap)
+        return out.astype(q.dtype)
+
+    nq = sq // ATTN_CHUNK
+    q_chunks = jnp.moveaxis(
+        qf.reshape(b, hq, nq, ATTN_CHUNK, d), 2, 0)          # (nq,B,H,Cq,D)
+
+    def body(_, inp):
+        qi, qc = inp
+        o = _attend_block(qc, kf, vf, offset + qi * ATTN_CHUNK,
+                          causal, window, skv, logit_cap)
+        return (), o
+
+    _, outs = jax.lax.scan(body, (), (jnp.arange(nq), q_chunks))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, hq, sq, d)
+    return out.astype(q.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP oracle: down( silu(x@gate) * (x@up) )."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+         state: jax.Array | None = None):
+    """RWKV6 (Finch) time-mix recurrence oracle.
+
+    r,k,v,w: (B, T, H, D); u: (H, D); state: (B, H, D, D).
+    s_t = diag(exp(-exp(w_t))) s_{t-1} + k_t^T v_t
+    o_t = r_t (s_{t-1} + diag(u) k_t^T v_t)
+    Returns (out (B,T,H,D), final_state).
+    """
+    b, t, h, d = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, d, d), dtype=jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,D) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,D,D)
+        out = jnp.einsum("bhd,bhde->bhe", rt, s + u[None] [..., :, None] * kv)
+        decay = jnp.exp(-jnp.exp(wt.astype(jnp.float32)))
+        s = s * decay[..., :, None] + kv
+        return s, out
+
+    xs = (jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(w, 1, 0).astype(jnp.float32))
+    final, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), final

@@ -1,0 +1,97 @@
+"""RWKV6 (Finch) WKV recurrence Pallas kernel.
+
+The data-dependent-decay linear-attention update
+
+    s_t = diag(exp(-exp(w_t))) . s_{t-1} + k_t^T v_t
+    o_t = r_t . (s_{t-1} + diag(u) k_t^T v_t)
+
+is sequential in t but embarrassingly parallel over (batch, heads).  TPU
+adaptation: grid (B, H, T/bt) with the (D, D) state held in VMEM scratch
+across time-blocks (the minor grid dim), a `fori_loop` over the bt in-tile
+steps, and all outer products shaped (D, D) = (64, 64) -> MXU/VPU friendly
+and far under VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.registry import kernel
+from . import ref
+from .common import interpret_mode, pad_dim, round_up
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                 s_ref, *, block_t: int, t_len: int):
+    ti = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)  # (D,)
+
+    def step(t, _):
+        inside = ti * block_t + t < t_len
+
+        @pl.when(inside)
+        def _():
+            rt = r_ref[0, t, 0].astype(jnp.float32)   # (D,)
+            kt = k_ref[0, t, 0].astype(jnp.float32)
+            vt = v_ref[0, t, 0].astype(jnp.float32)
+            wt = w_ref[0, t, 0].astype(jnp.float32)
+            s = s_ref[...]
+            kv = kt[:, None] * vt[None, :]            # (D, D)
+            out = jnp.sum(rt[:, None] * (s + u[:, None] * kv), axis=0)
+            o_ref[0, t, 0] = out.astype(o_ref.dtype)
+            decay = jnp.exp(-jnp.exp(wt))
+            s_ref[...] = s * decay[:, None] + kv
+
+        return ()
+
+    jax.lax.fori_loop(0, block_t, step, ())
+
+    @pl.when(ti == nt - 1)
+    def _final():
+        sT_ref[0, 0] = s_ref[...].astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+         state: Optional[jax.Array] = None, block_t: int = 64
+         ) -> Tuple[jax.Array, jax.Array]:
+    """r,k,v,w: (B, T, H, D); u: (H, D); state: (B, H, D, D) f32 or None.
+    Returns (out (B,T,H,D), final_state (B,H,D,D))."""
+    b, t, h, d = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, d, d), dtype=jnp.float32)
+    bt = min(block_t, round_up(t, 8))
+    tp = round_up(t, bt)
+    rp, kp2, vp, wp = (pad_dim(x, 1, tp) for x in (r, k, v, w))
+
+    grid = (b, h, tp // bt)
+    seq_spec = pl.BlockSpec((1, bt, 1, d), lambda bi, hi, ti: (bi, ti, hi, 0))
+    u_spec = pl.BlockSpec((1, d), lambda bi, hi, ti: (hi, 0))
+    s_spec = pl.BlockSpec((1, 1, d, d), lambda bi, hi, ti: (bi, hi, 0, 0))
+    out, s_final = pl.pallas_call(
+        functools.partial(_wkv6_kernel, block_t=bt, t_len=t),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, u_spec, s_spec],
+        out_specs=[seq_spec, s_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, tp, h, d), r.dtype),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret_mode(),
+    )(rp, kp2, vp, wp, u, state)
+    return out[:, :t], s_final
+
+
+kernel("wkv6", ref=ref.wkv6)(wkv6)

@@ -1,0 +1,67 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Per-cell collective attribution: which model op owns the interconnect.
+
+    python -m repro.launch.diagnose --arch qwen3-14b --shape train_4k \
+        [--unrolled] [--opt k=v ...]
+"""
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.launch.dryrun import _compile_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_bytes, collective_sources
+from repro.launch.specs import build_lowerable
+
+
+def diagnose(arch: str, shape: str, unrolled: bool = True, top: int = 15,
+             **overrides):
+    cfg = get_config(arch)
+    if unrolled:
+        # 2-layer unrolled variant: per-layer collectives visible at the
+        # top level with full metadata (while-loop bodies hide trip counts)
+        from repro.launch.dryrun import _analysis_variants
+        variants = _analysis_variants(cfg.scaled(**overrides) if overrides else cfg)
+        vcfg = variants.get("c2") or variants.get("c21")
+    else:
+        vcfg = cfg.scaled(**overrides) if overrides else cfg
+    mesh = make_production_mesh()
+    low = build_lowerable(arch, shape, cfg_override=vcfg, microbatches=1)
+    from repro.kernels.ref import unchunked_attention
+    with unchunked_attention():
+        compiled = _compile_cell(low, mesh)
+    hlo = compiled.as_text()
+    total = collective_bytes(hlo)
+    print(f"== {arch} x {shape} ({'unrolled-2L' if unrolled else 'full'}) ==")
+    print("totals/chip:", {k: f"{v/1e9:.2f}GB" for k, v in total.items()})
+    for kind, name, b in collective_sources(hlo, top):
+        print(f"  {b/1e9:8.2f}GB  {kind:20s} {name}")
+    return compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=list(SHAPES), required=True)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--opt", nargs="*", default=[],
+                    help="cfg overrides, e.g. opt_seq_parallel=1")
+    args = ap.parse_args(argv)
+    overrides = {}
+    for kv in args.opt:
+        k, _, v = kv.partition("=")
+        overrides[k] = bool(int(v)) if v in ("0", "1") else v
+    diagnose(args.arch, args.shape, unrolled=not args.full, top=args.top,
+             **overrides)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

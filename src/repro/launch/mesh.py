@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — device count is locked at first jax init, and
+the dry-run must set XLA_FLAGS before that happens.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist locally, as a (data, model) mesh — used by the
+    examples and tests on the single CPU device."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,186 @@
+"""Roofline terms from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / ICI_bw
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  ``cost_analysis()`` reports the SPMD-partitioned per-device module
+(verified in tests/test_roofline.py), so no device division is applied.
+collective_bytes is parsed from the compiled HLO text: max(input, output)
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (including their -start forms).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b")
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective byte totals from HLO text (per-device program)."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done" in m.group(0) or "=" not in line:
+            continue
+        kind = m.group(1)
+        # "%x = <output shapes> all-reduce(<operand shapes>), ..."
+        head = line[: m.start()]
+        head = head.partition("=")[2]          # output shapes live after '='
+        tail = line[m.end():]
+        out_bytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        in_bytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tail))
+        out[kind] = out.get(kind, 0) + max(out_bytes, in_bytes)
+    return out
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def collective_sources(hlo_text: str, top: int = 15) -> List[Tuple[str, str, int]]:
+    """Attribute collective bytes to model ops via HLO op_name metadata.
+    Returns the top (kind, op_name-suffix, bytes) triples — the §Perf
+    profiling view (we have no wall-clock trace; this is the dry-run
+    equivalent of 'which op is hogging the interconnect')."""
+    agg: Dict[Tuple[str, str], int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done" in m.group(0) or "=" not in line:
+            continue
+        kind = m.group(1)
+        head = line[: m.start()].partition("=")[2]
+        tail = line[m.end():]
+        out_b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        in_b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tail))
+        nm = _OPNAME_RE.search(line)
+        name = nm.group(1) if nm else "?"
+        # keep the trailing, human-meaningful path components
+        name = "/".join(name.split("/")[-3:])
+        key = (kind, name)
+        agg[key] = agg.get(key, 0) + max(out_b, in_b)
+    ranked = sorted(agg.items(), key=lambda kv: -kv[1])[:top]
+    return [(k, n, b) for (k, n), b in ranked]
+
+
+#: ring-algorithm wire multipliers: an all-reduce moves ~2x the tensor
+#: (reduce-scatter + all-gather phases); the others move ~1x
+WIRE_WEIGHT = {"all-reduce": 2.0}
+
+
+def wire_bytes(breakdown: Dict[str, int]) -> float:
+    return float(sum(WIRE_WEIGHT.get(k, 1.0) * v for k, v in breakdown.items()))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                   # per-chip HLO flops
+    hbm_bytes: float               # per-chip HLO bytes accessed
+    coll_bytes: float              # per-chip collective WIRE bytes
+    coll_breakdown: Dict[str, int]
+    model_flops: float             # 6*N*D (train) or 2*N*D (inference), global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def useful_flops_ratio(self, n_chips: int) -> float:
+        """MODEL_FLOPS / (per-chip HLO flops * chips)."""
+        total = self.flops * n_chips
+        return self.model_flops / total if total else float("nan")
+
+    def mfu_bound(self, n_chips: int) -> float:
+        """Model-FLOPs utilization ceiling implied by the dominant term."""
+        if self.t_bound <= 0:
+            return float("nan")
+        return self.model_flops / (self.t_bound * n_chips * PEAK_FLOPS)
+
+    def to_dict(self, n_chips: int) -> Dict[str, Any]:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio(n_chips),
+            "mfu_bound": self.mfu_bound(n_chips),
+        }
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS = 6 N D (train) / 2 N D (inference), N = active params
+# ---------------------------------------------------------------------------
+
+def count_params(params_tree, cfg) -> Tuple[float, float]:
+    """(total, active) parameter counts from a (spec) tree."""
+    import jax
+    import numpy as np
+
+    total = active = 0.0
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_tree)
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        n = float(np.prod(np.shape(leaf))) if np.ndim(leaf) else 1.0
+        total += n
+        if cfg.n_experts and re.search(r"moe.*(w_gate|w_up|w_down)", name) \
+                and "shared" not in name:
+            active += n * cfg.top_k / cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, params_tree, kind: str, batch: int, seq: int) -> float:
+    _, active = count_params(params_tree, cfg)
+    if kind == "train":
+        return 6.0 * active * batch * seq
+    if kind == "prefill":
+        return 2.0 * active * batch * seq
+    return 2.0 * active * batch  # decode: one token per row

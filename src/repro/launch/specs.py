@@ -1,0 +1,236 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``build_lowerable(arch, shape)`` returns everything ``dryrun.py`` needs:
+the step function, example specs (no allocation), and in/out shardings.
+This is the single source of truth for how each family's train / prefill /
+decode step is shaped and sharded on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config, shape_applicable
+from repro.models import build_model
+from repro.models.common import ArchConfig, BATCH_AXES, MODEL, partition_tree
+from repro.train import TrainConfig, batch_pspecs, make_train_state, make_train_step, state_pspecs
+from repro.optim import AdamWConfig
+
+#: whisper: fixed encoder length (30 s of audio -> 1500 frames)
+WHISPER_ENC_FRAMES = 1500
+
+
+def spec_tree(tree) -> Any:
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(np.shape(a), a.dtype), tree)
+
+
+def default_microbatches(cfg: ArchConfig, shape: ShapeSpec, mesh_data: int = 16,
+                         budget_bytes: float = 2e9) -> int:
+    """Grad-accum factor so the remat-saved activations (~L x tokens x d x 2B
+    per data shard, x2 for MoE dispatch buffers / SSM conv+state streams)
+    stay under ``budget_bytes`` (~1/8 of v5e HBM, leaving room for params,
+    optimizer shards, gradients and transients)."""
+    if shape.kind != "train":
+        return 1
+    rows = max(1, shape.batch // mesh_data)
+    width = cfg.d_model * (2 if cfg.family in ("hybrid", "moe") else 1)
+    est = cfg.n_layers * rows * shape.seq * width * 2
+    mb = 1
+    while est / mb > budget_bytes and mb < min(16, rows):
+        mb *= 2
+    return mb
+
+
+@dataclasses.dataclass
+class Lowerable:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable              # the pure step function
+    specs: Tuple[Any, ...]    # ShapeDtypeStructs, one per arg
+    in_pspecs: Tuple[Any, ...]
+    out_pspecs: Any           # or None
+    donate: Tuple[int, ...] = ()
+    note: str = ""
+
+
+def _train_batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.batch, shape.seq
+    i32 = jnp.int32
+    if cfg.family == "encdec":
+        # split the token budget: half encoder frames, half decoder tokens
+        half = s // 2
+        return {
+            "frames": jax.ShapeDtypeStruct((b, half, cfg.d_model), cfg.adtype),
+            "tokens": jax.ShapeDtypeStruct((b, half), i32),
+            "labels": jax.ShapeDtypeStruct((b, half), i32),
+        }
+    if cfg.family == "vlm":
+        # patch prefix + text fills the remaining positions
+        text = s - cfg.n_patches
+        return {
+            "patch_embeds": jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), cfg.adtype),
+            "tokens": jax.ShapeDtypeStruct((b, text), i32),
+            "labels": jax.ShapeDtypeStruct((b, text), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "labels": jax.ShapeDtypeStruct((b, s), i32),
+    }
+
+
+def _state_specs(model, cfg: ArchConfig, compress: bool = False):
+    params = jax.eval_shape(model.init_params, jax.random.key(0))
+
+    def opt_of(p):
+        from repro.optim import adamw_init
+        return adamw_init(p)
+
+    state = {"params": params, "opt": jax.eval_shape(opt_of, params)}
+    if compress:
+        state["ef"] = jax.eval_shape(
+            lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p), params)
+    return state
+
+
+def _cache_specs(model, cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return jax.eval_shape(lambda: model.init_cache(batch, max_len, WHISPER_ENC_FRAMES))
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def _cache_pspecs(model, cache_specs):
+    rules = model.cache_partition_rules()
+    return partition_tree(cache_specs, rules)
+
+
+def build_lowerable(arch: str, shape_name: str, *,
+                    microbatches: Optional[int] = None,
+                    compress_grads: bool = False,
+                    zero1: bool = True,
+                    cfg_override: Optional[ArchConfig] = None) -> Lowerable:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} skipped: {why}")
+    model = build_model(cfg)
+
+    if shape.kind == "train":
+        mb = microbatches if microbatches is not None else default_microbatches(cfg, shape)
+        tcfg = TrainConfig(microbatches=mb, compress_grads=compress_grads,
+                           opt=AdamWConfig())
+        step = make_train_step(model, tcfg)
+        state_specs = _state_specs(model, cfg, compress=compress_grads)
+        batch_specs = _train_batch_specs(cfg, shape)
+        sspec = state_pspecs(model, state_specs)
+        if not zero1:
+            sspec = {  # plain replicated-over-data optimizer
+                "params": sspec["params"],
+                "opt": {"master": sspec["params"], "m": sspec["params"],
+                        "v": sspec["params"], "step": P()},
+                **({"ef": sspec["params"]} if "ef" in sspec else {}),
+            }
+        bspec = batch_pspecs(batch_specs)
+        return Lowerable(
+            arch=arch, shape=shape_name, kind="train", fn=step,
+            specs=(state_specs, batch_specs),
+            in_pspecs=(sspec, bspec), out_pspecs=(sspec, None),
+            donate=(0,), note=f"microbatches={mb} zero1={zero1}")
+
+    params_specs = jax.eval_shape(model.init_params, jax.random.key(0))
+    prules = model.partition_rules()
+    pspec = partition_tree(params_specs, prules)
+
+    if shape.kind == "prefill":
+        cache_specs = _cache_specs(model, cfg, shape.batch, shape.seq)
+        cspec = _cache_pspecs(model, cache_specs)
+        if cfg.family == "encdec":
+            fn = lambda p, frames, toks, c: model.prefill(p, frames, toks, c)
+            half = WHISPER_ENC_FRAMES
+            specs = (params_specs,
+                     jax.ShapeDtypeStruct((shape.batch, half, cfg.d_model), cfg.adtype),
+                     jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32),
+                     cache_specs)
+            in_pspecs = (pspec, P(BATCH_AXES, None, None), P(BATCH_AXES, None), cspec)
+        else:
+            fn = lambda p, toks, c: model.prefill(p, toks, c)
+            specs = (params_specs,
+                     jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32),
+                     cache_specs)
+            in_pspecs = (pspec, P(BATCH_AXES, None), cspec)
+        return Lowerable(
+            arch=arch, shape=shape_name, kind="prefill", fn=fn, specs=specs,
+            in_pspecs=in_pspecs, out_pspecs=(None, cspec),
+            donate=(len(specs) - 1,))
+
+    # decode: one new token against a seq_len-deep cache
+    cache_specs = _cache_specs(model, cfg, shape.batch, shape.seq)
+    cspec = _cache_pspecs(model, cache_specs)
+    fn = lambda p, tok, pos, c: model.decode_step(p, tok, pos, c)
+    specs = (params_specs,
+             jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32),
+             cache_specs)
+    in_pspecs = (pspec, P(BATCH_AXES, None), P(), cspec)
+    return Lowerable(
+        arch=arch, shape=shape_name, kind="decode", fn=fn, specs=specs,
+        in_pspecs=in_pspecs, out_pspecs=(None, cspec), donate=(3,))
+
+
+def input_specs(arch: str, shape_name: str, **kw) -> Tuple[Any, ...]:
+    """Paper-interface helper: the ShapeDtypeStruct stand-ins for a cell."""
+    return build_lowerable(arch, shape_name, **kw).specs
+
+
+def named_shardings(pspec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        pspec_tree, is_leaf=lambda x: isinstance(x, P) or x is None)
+
+
+def fit_pspec(spec: P, shape, mesh_shape: Dict[str, int]) -> P:
+    """pjit ARGUMENT shardings must divide dims exactly (intermediates get
+    GSPMD padding, arguments do not).  Keep the largest prefix of each dim's
+    axis tuple that divides; drop the rest (-> replication on that dim).
+    E.g. vocab=49155 over 16 'model' shards -> replicated; batch=1 decode
+    over ('pod','data') -> replicated."""
+    if not isinstance(spec, P):
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, (tuple, list)) else (e,)
+        keep, cur = [], 1
+        for a in axes:
+            if dim % (cur * mesh_shape[a]) == 0:
+                keep.append(a)
+                cur *= mesh_shape[a]
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def fit_pspecs(pspec_tree, specs_tree, mesh) -> Any:
+    """Leaf-wise fit of a PartitionSpec tree against ShapeDtypeStructs."""
+    mesh_shape = dict(mesh.shape)
+    return jax.tree.map(
+        lambda sds, s: fit_pspec(s, sds.shape, mesh_shape),
+        specs_tree, pspec_tree,
+        is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "dtype"))

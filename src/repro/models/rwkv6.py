@@ -1,0 +1,240 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+
+Time-mix: token-shift ddlerp (low-rank data-dependent interpolation of the
+five r/k/v/w/g streams), the WKV6 recurrence (Pallas kernel or jnp-scan
+oracle), per-head group norm, gated output.  Channel-mix: token-shifted
+squared-ReLU MLP.  Decode state is O(1): two shift vectors + the (H, D, D)
+WKV state per layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ref as kref
+from . import layers as L
+from .common import ArchConfig, KeyGen, MODEL, BATCH_AXES, Rules, dense_init, embed_init, constrain, scan_layers
+
+TM_LORA = 32   # ddlerp low-rank dim
+TD_LORA = 64   # decay low-rank dim
+
+
+def _heads(cfg: ArchConfig) -> Tuple[int, int]:
+    dh = cfg.rwkv_head_dim
+    return cfg.d_model // dh, dh
+
+
+def init_rwkv_layer(key, cfg: ArchConfig) -> Dict[str, Any]:
+    kg = KeyGen(key)
+    d, f = cfg.d_model, cfg.d_ff
+    nh, dh = _heads(cfg)
+    zeros = lambda *s: jnp.zeros(s, cfg.pdtype)
+    return {
+        "ln1": L.init_norm(cfg), "ln2": L.init_norm(cfg),
+        "tm": {
+            "maa_x": zeros(d), "maa_w": zeros(d), "maa_k": zeros(d),
+            "maa_v": zeros(d), "maa_r": zeros(d), "maa_g": zeros(d),
+            "tm_w1": dense_init(kg("tm_w1"), (d, 5 * TM_LORA), cfg.pdtype),
+            "tm_w2": dense_init(kg("tm_w2"), (5, TM_LORA, d), cfg.pdtype),
+            "decay": zeros(d),
+            "td_w1": dense_init(kg("td_w1"), (d, TD_LORA), cfg.pdtype),
+            "td_w2": dense_init(kg("td_w2"), (TD_LORA, d), cfg.pdtype),
+            "u": dense_init(kg("u"), (nh, dh), jnp.float32),
+            "w_r": dense_init(kg("w_r"), (d, d), cfg.pdtype),
+            "w_k": dense_init(kg("w_k"), (d, d), cfg.pdtype),
+            "w_v": dense_init(kg("w_v"), (d, d), cfg.pdtype),
+            "w_g": dense_init(kg("w_g"), (d, d), cfg.pdtype),
+            "w_o": dense_init(kg("w_o"), (d, d), cfg.pdtype),
+            "gn_scale": jnp.ones((d,), cfg.pdtype),
+            "gn_bias": jnp.zeros((d,), cfg.pdtype),
+        },
+        "cm": {
+            "maa_k": zeros(d), "maa_r": zeros(d),
+            "w_k": dense_init(kg("cm_k"), (d, f), cfg.pdtype),
+            "w_v": dense_init(kg("cm_v"), (f, d), cfg.pdtype),
+            "w_r": dense_init(kg("cm_r"), (d, d), cfg.pdtype),
+        },
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1}; position 0 gets `last` (decode) or zeros."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _group_norm(x: jax.Array, scale, bias, nh: int, dh: int, eps: float = 64e-5):
+    b, t, d = x.shape
+    xg = x.reshape(b, t, nh, dh).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, t, d) * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32))
+
+
+def time_mix(p, x, cfg: ArchConfig, wkv_fn, shift_in=None, wkv_state=None):
+    """x: (B,T,D). Returns (out, new_shift (B,D), new_wkv_state)."""
+    b, t, d = x.shape
+    nh, dh = _heads(cfg)
+    xprev = _shift(x, shift_in)
+    sx = xprev - x
+    xxx = x + sx * p["maa_x"]
+    lora = jnp.tanh(xxx @ p["tm_w1"]).reshape(b, t, 5, TM_LORA)
+    mixes = jnp.einsum("btfl,fld->btfd", lora, p["tm_w2"])       # (B,T,5,D)
+    xw = x + sx * (p["maa_w"] + mixes[:, :, 0])
+    xk = x + sx * (p["maa_k"] + mixes[:, :, 1])
+    xv = x + sx * (p["maa_v"] + mixes[:, :, 2])
+    xr = x + sx * (p["maa_r"] + mixes[:, :, 3])
+    xg = x + sx * (p["maa_g"] + mixes[:, :, 4])
+
+    r = (xr @ p["w_r"]).reshape(b, t, nh, dh)
+    k = (xk @ p["w_k"]).reshape(b, t, nh, dh)
+    v = (xv @ p["w_v"]).reshape(b, t, nh, dh)
+    g = jax.nn.silu((xg @ p["w_g"]).astype(jnp.float32))
+    w = (p["decay"].astype(jnp.float32)
+         + (jnp.tanh(xw @ p["td_w1"]) @ p["td_w2"]).astype(jnp.float32))
+    w = w.reshape(b, t, nh, dh)
+
+    out, new_state = wkv_fn(r, k, v, w, p["u"], wkv_state)
+    out = out.reshape(b, t, d)
+    out = _group_norm(out, p["gn_scale"], p["gn_bias"], nh, dh)
+    out = (out * g).astype(cfg.adtype) @ p["w_o"]
+    return out, x[:, -1, :], new_state
+
+
+def channel_mix(p, x, cfg: ArchConfig, shift_in=None):
+    xprev = _shift(x, shift_in)
+    sx = xprev - x
+    xk = x + sx * p["maa_k"]
+    xr = x + sx * p["maa_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    k = constrain(k, BATCH_AXES, None, MODEL)
+    kv = k @ p["w_v"]
+    return jax.nn.sigmoid((xr @ p["w_r"]).astype(jnp.float32)).astype(cfg.adtype) * kv, x[:, -1, :]
+
+
+class RWKV6Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def _wkv_fn(self):
+        cfg = self.cfg
+        if cfg.use_pallas:
+            from repro.kernels.wkv6 import wkv6 as pallas_wkv6
+            return lambda r, k, v, w, u, s: pallas_wkv6(r, k, v, w, u, s)
+        return lambda r, k, v, w, u, s: kref.wkv6(r, k, v, w, u, s)
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        keys = jax.random.split(kg("layers"), cfg.n_layers)
+        return {
+            "embed": L.init_embed(kg("embed"), cfg),
+            "ln0": L.init_norm(cfg),
+            "layers": jax.vmap(lambda k: init_rwkv_layer(k, cfg))(keys),
+            "final_norm": L.init_norm(cfg),
+        }
+
+    def _layer(self, lp, x, cfg, wkv_fn, state=None):
+        st = state or {}
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        tm_out, tm_shift, wkv_state = time_mix(
+            lp["tm"], h, cfg, wkv_fn,
+            st.get("tm_shift"), st.get("wkv"))
+        x = x + tm_out
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        cm_out, cm_shift = channel_mix(lp["cm"], h, cfg, st.get("cm_shift"))
+        x = x + cm_out
+        new_state = {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv_state}
+        return x, new_state
+
+    def hidden_states(self, params, tokens):
+        cfg = self.cfg
+        wkv_fn = self._wkv_fn()
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        x = L.apply_norm(params["ln0"], x, cfg)
+
+        def body(xc, lp):
+            xo, _ = self._layer(lp, xc, cfg, wkv_fn)
+            xo = constrain(xo, BATCH_AXES, None, None)
+            return xo, ()
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = scan_layers(body_fn, x, params["layers"], unroll=cfg.unroll_layers)
+        return L.apply_norm(params["final_norm"], x, cfg)
+
+    def loss_fn(self, params, batch):
+        logits = L.logits_from_hidden(
+            params["embed"], self.hidden_states(params, batch["tokens"]), self.cfg)
+        loss = L.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return loss, {"loss": loss}
+
+    # ------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        nh, dh = _heads(cfg)
+        n, d = cfg.n_layers, cfg.d_model
+        return {
+            "tm_shift": jnp.zeros((n, batch, d), cfg.adtype),
+            "cm_shift": jnp.zeros((n, batch, d), cfg.adtype),
+            "wkv": jnp.zeros((n, batch, nh, dh, dh), jnp.float32),
+        }
+
+    def _run_cached(self, params, tokens, cache):
+        cfg = self.cfg
+        wkv_fn = self._wkv_fn()
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        x = L.apply_norm(params["ln0"], x, cfg)
+
+        def body(xc, inp):
+            lp, tm_s, cm_s, wkv_s = inp
+            xo, ns = self._layer(lp, xc, cfg, wkv_fn,
+                                 {"tm_shift": tm_s, "cm_shift": cm_s, "wkv": wkv_s})
+            return xo, (ns["tm_shift"], ns["cm_shift"], ns["wkv"])
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and tokens.shape[1] > 1) else body
+        x, (tm_s, cm_s, wkv_s) = scan_layers(
+            body_fn, x,
+            (params["layers"], cache["tm_shift"], cache["cm_shift"], cache["wkv"]),
+            unroll=cfg.unroll_layers)
+        x = L.apply_norm(params["final_norm"], x[:, -1:], cfg)
+        logits = L.logits_from_hidden(params["embed"], x, cfg)
+        return logits, {"tm_shift": tm_s, "cm_shift": cm_s,
+                        "wkv": wkv_s.astype(jnp.float32)}
+
+    def prefill(self, params, tokens, cache):
+        return self._run_cached(params, tokens, cache)
+
+    def decode_step(self, params, token, pos, cache):
+        del pos  # recurrent: position-free
+        return self._run_cached(params, token, cache)
+
+    # ---------------------------------------------------------- sharding
+    def partition_rules(self) -> Rules:
+        lay: Rules = [
+            (r"tm.*tm_w1|tm.*td_w1", P(None, MODEL)),
+            (r"tm.*tm_w2", P(None, None, MODEL)),
+            (r"tm.*td_w2", P(MODEL, None)),
+            (r"tm.*w_r|tm.*w_k|tm.*w_v|tm.*w_g", P(None, MODEL)),
+            (r"tm.*w_o", P(MODEL, None)),
+            (r"tm.*'u'", P(MODEL, None)),
+            (r"cm.*w_k", P(None, MODEL)),
+            (r"cm.*w_v", P(MODEL, None)),
+            (r"cm.*w_r", P(None, MODEL)),
+        ]
+        rules: Rules = [
+            (r"embed.*embedding", P(MODEL, None)),
+            (r"embed.*unembed", P(None, MODEL)),
+        ]
+        rules += [(rf"layers.*(?:{pat})", P(None, *spec)) for pat, spec in lay]
+        return rules
+
+    def cache_partition_rules(self) -> Rules:
+        return [
+            (r"tm_shift|cm_shift", P(None, BATCH_AXES, MODEL)),
+            (r"wkv", P(None, BATCH_AXES, MODEL, None, None)),
+        ]

@@ -1,0 +1,249 @@
+"""Whisper-style encoder-decoder backbone (audio frontend STUBBED).
+
+Per the assignment, the conv frontend is a stub: ``input_specs()`` provides
+precomputed frame embeddings (B, T_enc, D).  The encoder adds sinusoidal
+positions and runs bidirectional LayerNorm/GELU transformer layers; the
+decoder uses learned positions, causal self-attention and cross-attention
+over the encoder states.  Serve: cross K/V are computed once at prefill and
+cached; self-attention uses the standard KV cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .common import ArchConfig, KeyGen, MODEL, BATCH_AXES, Rules, dense_init, embed_init, constrain, scan_layers
+
+
+def sinusoids(length: int, channels: int) -> jax.Array:
+    log_timescale = jnp.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    ang = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def init_cross_attention(key, cfg: ArchConfig) -> Dict[str, Any]:
+    kg = KeyGen(key)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "w_q": dense_init(kg("w_q"), (d, h * dh), cfg.pdtype),
+        "w_k": dense_init(kg("w_k"), (d, h * dh), cfg.pdtype),
+        "w_v": dense_init(kg("w_v"), (d, h * dh), cfg.pdtype),
+        "w_o": dense_init(kg("w_o"), (h * dh, d), cfg.pdtype),
+    }
+
+
+def cross_attention(p, x, kv_kc, kv_vc, cfg: ArchConfig) -> jax.Array:
+    """x: (B,S,D); kv_kc/kv_vc: precomputed (B,H,T_enc,dh)."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["w_q"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    from repro.kernels import ref as kref
+    o = kref.attention(q, kv_kc, kv_vc, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    return o @ p["w_o"]
+
+
+def cross_kv(p, enc: jax.Array, cfg: ArchConfig):
+    b, t, _ = enc.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    k = (enc @ p["w_k"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = (enc @ p["w_v"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    return k, v
+
+
+class WhisperModel:
+    """Backbone = enc_layers encoder + dec_layers decoder blocks."""
+
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.enc_layers and cfg.dec_layers
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def _init_enc_layer(self, key):
+        cfg = self.cfg
+        kg = KeyGen(key)
+        return {
+            "ln_attn": L.init_norm(cfg),
+            "attn": L.init_attention(kg("attn"), cfg),
+            "ln_mlp": L.init_norm(cfg),
+            "mlp": L.init_mlp(kg("mlp"), cfg),
+        }
+
+    def _init_dec_layer(self, key):
+        cfg = self.cfg
+        kg = KeyGen(key)
+        return {
+            "ln_self": L.init_norm(cfg),
+            "self_attn": L.init_attention(kg("self"), cfg),
+            "ln_cross": L.init_norm(cfg),
+            "cross_attn": init_cross_attention(kg("cross"), cfg),
+            "ln_mlp": L.init_norm(cfg),
+            "mlp": L.init_mlp(kg("mlp"), cfg),
+        }
+
+    def init_params(self, rng, max_dec_positions: int = 32776):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        ekeys = jax.random.split(kg("enc"), cfg.enc_layers)
+        dkeys = jax.random.split(kg("dec"), cfg.dec_layers)
+        return {
+            "embed": L.init_embed(kg("embed"), cfg),
+            "pos_dec": embed_init(kg("pos_dec"), (max_dec_positions, cfg.d_model), cfg.pdtype),
+            "enc_layers": jax.vmap(self._init_enc_layer)(ekeys),
+            "enc_norm": L.init_norm(cfg),
+            "dec_layers": jax.vmap(self._init_dec_layer)(dkeys),
+            "final_norm": L.init_norm(cfg),
+        }
+
+    # ------------------------------------------------------------ encoder
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: (B, T_enc, D) stub embeddings -> encoder states."""
+        cfg = self.cfg
+        b, t, d = frames.shape
+        x = frames.astype(cfg.adtype) + sinusoids(t, d).astype(cfg.adtype)[None]
+        x = constrain(x, BATCH_AXES, None, None)
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+        def body(xc, lp):
+            h = L.apply_norm(lp["ln_attn"], xc, cfg)
+            xc = xc + L.attention_full(lp["attn"], h, cfg, positions, causal=False)
+            h = L.apply_norm(lp["ln_mlp"], xc, cfg)
+            xc = xc + L.apply_mlp(lp["mlp"], h, cfg)
+            return constrain(xc, BATCH_AXES, None, None), ()
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = scan_layers(body_fn, x, params["enc_layers"], unroll=cfg.unroll_layers)
+        return L.apply_norm(params["enc_norm"], x, cfg)
+
+    # ------------------------------------------------------------ decoder
+    def _embed_dec(self, params, tokens, start_pos: int = 0):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        s = tokens.shape[1]
+        pos_table = jax.lax.dynamic_slice_in_dim(params["pos_dec"], start_pos, s, axis=0)
+        return x + pos_table[None].astype(cfg.adtype)
+
+    def decode_full(self, params, tokens: jax.Array, enc: jax.Array) -> jax.Array:
+        """Teacher-forced decoder forward -> logits (B, S, V)."""
+        cfg = self.cfg
+        x = self._embed_dec(params, tokens)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(xc, lp):
+            h = L.apply_norm(lp["ln_self"], xc, cfg)
+            xc = xc + L.attention_full(lp["self_attn"], h, cfg, positions, causal=True)
+            h = L.apply_norm(lp["ln_cross"], xc, cfg)
+            ck, cv = cross_kv(lp["cross_attn"], enc, cfg)
+            xc = xc + cross_attention(lp["cross_attn"], h, ck, cv, cfg)
+            h = L.apply_norm(lp["ln_mlp"], xc, cfg)
+            xc = xc + L.apply_mlp(lp["mlp"], h, cfg)
+            return constrain(xc, BATCH_AXES, None, None), ()
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = scan_layers(body_fn, x, params["dec_layers"], unroll=cfg.unroll_layers)
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        return L.logits_from_hidden(params["embed"], x, cfg)
+
+    def loss_fn(self, params, batch):
+        """batch: frames (B,T_enc,D), tokens (B,S), labels (B,S)."""
+        enc = self.encode(params, batch["frames"])
+        logits = self.decode_full(params, batch["tokens"], enc)
+        loss = L.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return loss, {"loss": loss}
+
+    # ------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int, enc_len: int):
+        cfg = self.cfg
+        kv = L.init_kv_cache(cfg, cfg.dec_layers, batch, max_len, cfg.adtype)
+        h, dh = cfg.n_heads, cfg.head_dim
+        return {
+            "self": kv,
+            "cross_k": jnp.zeros((cfg.dec_layers, batch, h, enc_len, dh), cfg.adtype),
+            "cross_v": jnp.zeros((cfg.dec_layers, batch, h, enc_len, dh), cfg.adtype),
+        }
+
+    def prefill(self, params, frames, tokens, cache):
+        """Encode audio, precompute cross K/V, prefill decoder self-cache."""
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+        x = self._embed_dec(params, tokens)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(xc, inp):
+            lp, kvc = inp
+            h = L.apply_norm(lp["ln_self"], xc, cfg)
+            attn, kvc = L.prefill_kv(lp["self_attn"], h, cfg, positions, kvc)
+            xc = xc + attn
+            ck, cv = cross_kv(lp["cross_attn"], enc, cfg)
+            h = L.apply_norm(lp["ln_cross"], xc, cfg)
+            xc = xc + cross_attention(lp["cross_attn"], h, ck, cv, cfg)
+            h = L.apply_norm(lp["ln_mlp"], xc, cfg)
+            xc = xc + L.apply_mlp(lp["mlp"], h, cfg)
+            return xc, (kvc, ck.astype(cfg.adtype), cv.astype(cfg.adtype))
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, (kv, ck, cv) = scan_layers(body_fn, x, (params["dec_layers"], cache["self"]),
+                                      unroll=cfg.unroll_layers)
+        x = L.apply_norm(params["final_norm"], x[:, -1:], cfg)
+        logits = L.logits_from_hidden(params["embed"], x, cfg)
+        return logits, {"self": kv, "cross_k": ck, "cross_v": cv}
+
+    def decode_step(self, params, token, pos, cache):
+        cfg = self.cfg
+        # learned position embedding for the current token position
+        x = L.embed_tokens(params["embed"], token, cfg) + jnp.take(
+            params["pos_dec"], jnp.broadcast_to(pos, (1,)), axis=0)[None].astype(cfg.adtype)
+
+        def body(xc, inp):
+            lp, kvc, ck, cv = inp
+            h = L.apply_norm(lp["ln_self"], xc, cfg)
+            attn, kvc = L.attention_decode(lp["self_attn"], h, cfg, pos, kvc)
+            xc = xc + attn
+            h = L.apply_norm(lp["ln_cross"], xc, cfg)
+            xc = xc + cross_attention(lp["cross_attn"], h, ck, cv, cfg)
+            h = L.apply_norm(lp["ln_mlp"], xc, cfg)
+            xc = xc + L.apply_mlp(lp["mlp"], h, cfg)
+            return xc, kvc
+
+        x, kv = scan_layers(
+            body, x, (params["dec_layers"], cache["self"],
+                      cache["cross_k"], cache["cross_v"]),
+            unroll=cfg.unroll_layers)
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        logits = L.logits_from_hidden(params["embed"], x, cfg)
+        return logits, {"self": kv, "cross_k": cache["cross_k"],
+                        "cross_v": cache["cross_v"]}
+
+    # ---------------------------------------------------------- sharding
+    def partition_rules(self) -> Rules:
+        lay: Rules = [
+            (r"w_q|w_k|w_v", P(None, MODEL)),
+            (r"b_q|b_k|b_v", P(MODEL)),
+            (r"w_o", P(MODEL, None)),
+            (r"w_gate|w_up", P(None, MODEL)),
+            (r"b_up", P(MODEL)),
+            (r"w_down", P(MODEL, None)),
+        ]
+        rules: Rules = [
+            (r"embed.*embedding", P(MODEL, None)),
+            (r"embed.*unembed", P(None, MODEL)),
+            (r"pos_dec", P()),
+        ]
+        rules += [(rf"(enc|dec)_layers.*(?:{pat})", P(None, *spec)) for pat, spec in lay]
+        return rules
+
+    def cache_partition_rules(self) -> Rules:
+        return [
+            # seq over `model` (flash-decoding partition); cross K/V seq is
+            # 1500 frames (not divisible) -> batch sharding only
+            (r"self.*kpos", P(None, BATCH_AXES, MODEL)),
+            (r"self.*'k'|self.*'v'", P(None, BATCH_AXES, None, MODEL, None)),
+            (r"cross_k|cross_v", P(None, BATCH_AXES, None, None, None)),
+        ]

@@ -1,0 +1,201 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block applied
+every ``attn_every`` layers.
+
+Structure: ``n_super = n_layers / attn_every`` superblocks, each =
+[shared attention+MLP block (one weight copy, reused)] -> [attn_every Mamba2
+layers (per-layer weights, stacked)].  The scan runs over superblocks; the
+inner Mamba2 layers scan within.  (The published model adds per-invocation
+LoRA deltas on the shared block and concatenates the embedding; DESIGN.md
+records these simplifications.)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from . import mamba2 as M2
+from .common import ArchConfig, KeyGen, MODEL, BATCH_AXES, Rules, constrain, scan_layers
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.attn_every and cfg.n_layers % cfg.attn_every == 0
+        self.cfg = cfg
+        self.n_super = cfg.n_layers // cfg.attn_every
+        self.per_super = cfg.attn_every
+
+    # ------------------------------------------------------------- params
+    def _init_mamba_layer(self, key):
+        cfg = self.cfg
+        return {"ln": L.init_norm(cfg), "mamba": M2.init_mamba2(key, cfg)}
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        keys = jax.random.split(kg("mamba"), self.n_super * self.per_super)
+        keys = keys.reshape(self.n_super, self.per_super, *keys.shape[1:])
+        stacked = jax.vmap(jax.vmap(self._init_mamba_layer))(keys)
+        kgs = KeyGen(kg("shared"))
+        shared = {
+            "ln_attn": L.init_norm(cfg),
+            "attn": L.init_attention(kgs("attn"), cfg),
+            "ln_mlp": L.init_norm(cfg),
+            "mlp": L.init_mlp(kgs("mlp"), cfg),
+        }
+        return {
+            "embed": L.init_embed(kg("embed"), cfg),
+            "shared": shared,
+            "mamba_layers": stacked,
+            "final_norm": L.init_norm(cfg),
+        }
+
+    # ------------------------------------------------------------ forward
+    def _shared_fwd(self, p, x, positions):
+        cfg = self.cfg
+        h = L.apply_norm(p["ln_attn"], x, cfg)
+        x = x + L.attention_full(p["attn"], h, cfg, positions)
+        h = L.apply_norm(p["ln_mlp"], x, cfg)
+        return x + L.apply_mlp(p["mlp"], h, cfg)
+
+    def hidden_states(self, params, tokens):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        shared = params["shared"]
+
+        def mamba_layer(xc, lp):
+            h = L.apply_norm(lp["ln"], xc, cfg)
+            return xc + M2.mamba2_forward(lp["mamba"], h, cfg), ()
+
+        def superblock(xc, sp):
+            xc = self._shared_fwd(shared, xc, positions)
+            xc, _ = scan_layers(mamba_layer, xc, sp, unroll=cfg.unroll_layers)
+            xc = constrain(xc, BATCH_AXES, None, None)
+            return xc, ()
+
+        body = jax.checkpoint(superblock) if cfg.remat else superblock
+        x, _ = scan_layers(body, x, params["mamba_layers"], unroll=cfg.unroll_layers)
+        return L.apply_norm(params["final_norm"], x, cfg)
+
+    def loss_fn(self, params, batch):
+        logits = L.logits_from_hidden(
+            params["embed"], self.hidden_states(params, batch["tokens"]), self.cfg)
+        loss = L.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return loss, {"loss": loss}
+
+    # ------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        kv = L.init_kv_cache(cfg, self.n_super, batch, max_len, cfg.adtype)
+        base = M2.init_mamba2_state(cfg, batch)
+        ssm = jax.tree.map(
+            lambda a: jnp.zeros((self.n_super, self.per_super) + a.shape, a.dtype), base)
+        return {"kv": kv, "ssm": ssm}
+
+    def prefill(self, params, tokens, cache):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        shared = params["shared"]
+
+        def mamba_layer(xc, inp):
+            lp, st = inp
+            h = L.apply_norm(lp["ln"], xc, cfg)
+            d_inner, nh, hd, conv_ch = M2.dims(cfg)
+            # run full forward, then reconstruct the decode state:
+            # conv tail = last (ssm_conv-1) pre-activation channels;
+            # ssm state = final chunked state
+            zxbcdt = h @ lp["mamba"]["in_proj"]
+            z, xbc, dt = M2._split_proj(zxbcdt, cfg)
+            pad = jnp.pad(xbc, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+            conv = sum(pad[:, i : i + s, :] * lp["mamba"]["conv_w"][i][None, None, :]
+                       for i in range(cfg.ssm_conv))
+            xbc_act = jax.nn.silu((conv + lp["mamba"]["conv_b"]).astype(jnp.float32)).astype(cfg.adtype)
+            xs = xbc_act[..., :d_inner].reshape(b, s, nh, hd)
+            Bm = xbc_act[..., d_inner : d_inner + cfg.ssm_state]
+            Cm = xbc_act[..., d_inner + cfg.ssm_state :]
+            dtf = jax.nn.softplus(dt.astype(jnp.float32) + lp["mamba"]["dt_bias"])
+            A = -jnp.exp(lp["mamba"]["A_log"])
+            y, hT = M2._ssd_chunked(xs.astype(jnp.float32), dtf, A,
+                                    Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                                    cfg.ssm_chunk, st["ssm"],
+                                    local=cfg.opt_ssd_local)
+            out = M2._gated_out(lp["mamba"], y, z, xs.astype(jnp.float32), cfg)
+            new_st = {"conv": xbc[:, -(cfg.ssm_conv - 1):, :].astype(st["conv"].dtype),
+                      "ssm": hT}
+            return xc + out, new_st
+
+        def superblock(xc, inp):
+            sp, st, kvc = inp
+            h = L.apply_norm(shared["ln_attn"], xc, cfg)
+            attn, kvc = L.prefill_kv(shared["attn"], h, cfg, positions, kvc)
+            xc = xc + attn
+            h = L.apply_norm(shared["ln_mlp"], xc, cfg)
+            xc = xc + L.apply_mlp(shared["mlp"], h, cfg)
+            xc, new_st = scan_layers(mamba_layer, xc, (sp, st), unroll=cfg.unroll_layers)
+            return xc, (new_st, kvc)
+
+        body = jax.checkpoint(superblock) if cfg.remat else superblock
+        x, (new_ssm, new_kv) = scan_layers(
+            body, x, (params["mamba_layers"], cache["ssm"], cache["kv"]),
+            unroll=cfg.unroll_layers)
+        x = L.apply_norm(params["final_norm"], x[:, -1:], cfg)
+        logits = L.logits_from_hidden(params["embed"], x, cfg)
+        return logits, {"kv": new_kv, "ssm": new_ssm}
+
+    def decode_step(self, params, token, pos, cache):
+        cfg = self.cfg
+        x = L.embed_tokens(params["embed"], token, cfg)
+        shared = params["shared"]
+
+        def mamba_layer(xc, inp):
+            lp, st = inp
+            h = L.apply_norm(lp["ln"], xc, cfg)
+            out, st = M2.mamba2_step(lp["mamba"], h, cfg, st)
+            return xc + out, st
+
+        def superblock(xc, inp):
+            sp, st, kvc = inp
+            h = L.apply_norm(shared["ln_attn"], xc, cfg)
+            attn, kvc = L.attention_decode(shared["attn"], h, cfg, pos, kvc)
+            xc = xc + attn
+            h = L.apply_norm(shared["ln_mlp"], xc, cfg)
+            xc = xc + L.apply_mlp(shared["mlp"], h, cfg)
+            xc, new_st = scan_layers(mamba_layer, xc, (sp, st), unroll=cfg.unroll_layers)
+            return xc, (new_st, kvc)
+
+        x, (new_ssm, new_kv) = scan_layers(
+            superblock, x, (params["mamba_layers"], cache["ssm"], cache["kv"]),
+            unroll=cfg.unroll_layers)
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        logits = L.logits_from_hidden(params["embed"], x, cfg)
+        return logits, {"kv": new_kv, "ssm": new_ssm}
+
+    # ---------------------------------------------------------- sharding
+    def partition_rules(self) -> Rules:
+        mamba = M2.mamba2_partition_rules()
+        rules: Rules = [
+            (r"embed.*embedding", P(MODEL, None)),
+            (r"embed.*unembed", P(None, MODEL)),
+            (r"shared.*w_q|shared.*w_k|shared.*w_v", P(None, MODEL)),
+            (r"shared.*w_o", P(MODEL, None)),
+            (r"shared.*w_gate|shared.*w_up", P(None, MODEL)),
+            (r"shared.*w_down", P(MODEL, None)),
+        ]
+        # mamba stack has TWO leading stack dims (super, layer-in-super)
+        rules += [(rf"mamba_layers.*(?:{pat})", P(None, None, *spec)) for pat, spec in mamba]
+        return rules
+
+    def cache_partition_rules(self) -> Rules:
+        return [
+            (r"kv.*kpos", P(None, BATCH_AXES, MODEL)),
+            (r"kv.*'k'|kv.*'v'", P(None, BATCH_AXES, None, MODEL, None)),
+            (r"ssm.*conv", P(None, None, BATCH_AXES, None, MODEL)),
+            (r"ssm.*ssm", P(None, None, BATCH_AXES, MODEL, None, None)),
+        ]

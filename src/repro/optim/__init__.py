@@ -1,0 +1,7 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from .schedule import Schedule, make_schedule
+from .compress import ef_int8_compress, ef_int8_decompress
+
+__all__ = ["AdamWConfig", "Schedule", "adamw_init", "adamw_update",
+           "ef_int8_compress", "ef_int8_decompress", "global_norm",
+           "make_schedule"]

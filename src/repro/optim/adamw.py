@@ -1,0 +1,85 @@
+"""AdamW with f32 master weights, global-norm clipping and ZeRO-1 sharding.
+
+Memory layout per parameter leaf: ``master`` (f32), ``m`` (f32), ``v`` (f32)
+— all three carry the param's TP sharding *plus* an extra ``data``-axis
+shard on their first divisible unsharded dim (ZeRO-1; see
+``common.zero1_spec``).  GSPMD turns the param update into: slice grad ->
+sharded m/v/master update -> all-gather the bf16 param, which is exactly the
+ZeRO-1 collective schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .schedule import Schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: Schedule = dataclasses.field(default_factory=Schedule)
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    # copy=True: when params are already f32 the master must still be a
+    # DISTINCT buffer, else step donation would donate one buffer twice
+    f32 = lambda t: jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    return {"master": f32(params), "m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.square(g.astype(jnp.float32))), tree, 0.0)
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cfg.schedule(step)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    else:
+        scale = 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p_master, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new_master = p_master - lr * (delta + cfg.weight_decay * p_master)
+        return new_master, m, v
+
+    new_master, new_m, new_v = _tree_multimap(
+        upd, state["master"], grads, state["m"], state["v"])
+
+    new_params = jax.tree.map(
+        lambda pm, p: pm.astype(p.dtype), new_master, params)
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def _tree_multimap(fn, *trees):
+    """tree_map over N trees where fn returns a tuple -> tuple of trees."""
+    leaves = [jax.tree.leaves(t) for t in trees]
+    treedef = jax.tree.structure(trees[0])
+    outs = [fn(*xs) for xs in zip(*leaves)]
+    n = len(outs[0])
+    return tuple(jax.tree.unflatten(treedef, [o[i] for o in outs]) for i in range(n))

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure jnp so they live inside the train step)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    kind: str = "cosine"          # cosine | linear | constant
+    base_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr: float = 3e-5
+
+    def __call__(self, step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = self.base_lr * jnp.minimum(1.0, s / max(1, self.warmup_steps))
+        frac = jnp.clip((s - self.warmup_steps)
+                        / max(1, self.total_steps - self.warmup_steps), 0.0, 1.0)
+        if self.kind == "cosine":
+            decayed = self.min_lr + 0.5 * (self.base_lr - self.min_lr) * (
+                1.0 + jnp.cos(jnp.pi * frac))
+        elif self.kind == "linear":
+            decayed = self.base_lr + (self.min_lr - self.base_lr) * frac
+        else:
+            decayed = jnp.asarray(self.base_lr, jnp.float32)
+        return jnp.where(s < self.warmup_steps, warm, decayed)
+
+
+def make_schedule(kind: str = "cosine", **kw) -> Schedule:
+    return Schedule(kind=kind, **kw)

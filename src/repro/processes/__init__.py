@@ -1,0 +1,9 @@
+"""Built-in Processes (paper §III-C, §IV): the operator library."""
+from .negate import Negate
+from .fft import FFT
+from .complex_elementprod import ComplexElementProd
+from .coil_combine import RSSCombine, XImageSum
+from .simple_mri_recon import SimpleMRIRecon
+
+__all__ = ["ComplexElementProd", "FFT", "Negate", "RSSCombine",
+           "SimpleMRIRecon", "XImageSum"]

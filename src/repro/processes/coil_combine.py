@@ -1,0 +1,45 @@
+"""Coil-combination processes: XImageSum (paper §IV-A step 2) and RSS
+(§IV-B, the Table I/II operation)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.process import Process
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class CombineParams:
+    use_pallas: bool = False
+
+
+class XImageSum(Process):
+    """(F, C, H, W) -> (F, H, W): sum the per-coil x-images."""
+
+    kernel_names = ("coil_combine",)
+
+    def apply(self, views, aux, params):
+        params = params or CombineParams()
+        x = views["kdata"]
+        if params.use_pallas:
+            out = self.getApp().kernels.get("xImageSum")(x)
+        else:
+            out = kref.ximage_sum(x)
+        return {"xdata": out}
+
+
+class RSSCombine(Process):
+    """(F, C, H, W) -> (F, H, W) f32: root-sum-of-squares combination."""
+
+    kernel_names = ("coil_combine",)
+
+    def apply(self, views, aux, params):
+        params = params or CombineParams()
+        x = views["kdata"]
+        if params.use_pallas:
+            out = self.getApp().kernels.get("rss")(x)
+        else:
+            out = kref.rss(x)
+        return {"xdata": out.astype(jnp.float32)}

@@ -1,0 +1,40 @@
+"""ComplexElementProd process (paper §IV-A step 1): multiply x-images by
+(optionally conjugated) sensitivity maps, in place."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.app import DataHandle
+from repro.core.process import Process
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ComplexElementProdParams:
+    conjugate: bool = True
+    use_pallas: bool = False
+
+
+conjugate = ComplexElementProdParams(conjugate=True)
+
+
+class ComplexElementProd(Process):
+    """kdata[f, c] *= conj?(smaps[c]); smaps come from the same KData arena
+    (or from an aux Data handle named 'smaps')."""
+
+    kernel_names = ("complex_elementprod",)
+
+    def apply(self, views, aux, params):
+        params = params or conjugate
+        if "smaps" in aux:
+            smaps = next(iter(aux["smaps"].values()))
+        else:
+            smaps = views["sensitivity_maps"]
+        if params.use_pallas:
+            fn = self.getApp().kernels.get("complexElementProd")
+            prod = fn(views["kdata"], smaps, params.conjugate)
+        else:
+            prod = kref.complex_elementprod(views["kdata"], smaps, params.conjugate)
+        out = dict(views)
+        out["kdata"] = prod
+        return out

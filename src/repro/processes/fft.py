@@ -1,0 +1,43 @@
+"""FFT process (paper §IV-A step 0, built on clFFT there, jnp.fft here).
+
+The paper's point about clFFT plan baking maps to XLA compilation: the
+expensive one-time work happens in ``init()`` (AOT trace+compile); each
+``launch()`` only executes.  The benchmark ``process_overhead`` measures
+exactly this split.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.process import Process
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTParams:
+    direction: str = "backward"     # "forward" | "backward" (paper: BACKWARD)
+    norm: str = "ortho"
+    var: str | None = None          # transform only this NDArray (None = all)
+
+
+FORWARD = FFTParams("forward")
+BACKWARD = FFTParams("backward")
+
+
+class FFT(Process):
+    """2-D (I)FFT over the trailing two axes of every complex NDArray."""
+
+    def apply(self, views, aux, params):
+        params = params or BACKWARD
+        out = {}
+        for name, v in views.items():
+            sel = params.var is None or name == params.var
+            if sel and jnp.issubdtype(v.dtype, jnp.complexfloating) and v.ndim >= 2:
+                if params.direction == "backward":
+                    out[name] = jnp.fft.ifft2(v, norm=params.norm).astype(v.dtype)
+                else:
+                    out[name] = jnp.fft.fft2(v, norm=params.norm).astype(v.dtype)
+            else:
+                out[name] = v
+        return out

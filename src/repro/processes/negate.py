@@ -1,0 +1,28 @@
+"""Negate process — the paper's listings 2–4 example."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.process import Process
+from repro.kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class NegateParams:
+    use_pallas: bool = False
+
+
+class Negate(Process):
+    """``output[i] = 1.0 - input[i]`` on every NDArray of the Data set."""
+
+    kernel_names = ("negate",)  # module name under repro.kernels
+
+    def apply(self, views, aux, params):
+        params = params or NegateParams()
+        if params.use_pallas:
+            fn = self.getApp().kernels.get("negate_kernel")
+        else:
+            fn = kref.negate
+        return {name: fn(v) for name, v in views.items()}

@@ -1,0 +1,63 @@
+"""SimpleMRIRecon (paper listing 6): M = sum_i conj(S_i) . IFFT(Y_i).
+
+A ProcessChain of FFT(BACKWARD, in-place) -> ComplexElementProd(conjugate,
+in-place) -> XImageSum, mirroring the paper's subprocess structure; zero
+copies between stages (stage outputs ARE stage inputs, donated)."""
+from __future__ import annotations
+
+from repro.core.process import Process, ProcessChain, ProfileParameters
+from .complex_elementprod import ComplexElementProd, ComplexElementProdParams
+from .coil_combine import XImageSum, CombineParams
+from .fft import FFT, FFTParams
+
+
+class SimpleMRIRecon(Process):
+    """``in_place=True`` is the paper-faithful pipeline (stages overwrite the
+    input KData, as in listing 6).  ``in_place=False`` routes through a
+    scratch KData handle so the input survives repeated launches (the
+    throughput-benchmark configuration)."""
+
+    def __init__(self, app=None, mode: str = "staged", use_pallas: bool = False,
+                 in_place: bool = True):
+        super().__init__(app)
+        self.mode = mode
+        self.use_pallas = use_pallas
+        self.in_place = in_place
+        self.chain: ProcessChain | None = None
+
+    def init(self) -> None:
+        app = self.getApp()
+        if self.in_place:
+            work = self.in_handle
+        else:
+            from repro.core.data import Data, NDArray
+            src = app.getData(self.in_handle)
+            scratch = Data(None)
+            for a in src:
+                scratch.add(NDArray(shape=a.shape, dtype=a.dtype, name=a.name))
+            work = app.addData(scratch)
+
+        p_ifft = FFT(app)
+        p_ifft.set_in_handle(self.in_handle)
+        p_ifft.set_out_handle(work)
+        p_ifft.set_launch_parameters(FFTParams("backward", var="kdata"))
+
+        p_prod = ComplexElementProd(app)
+        p_prod.set_in_handle(work)
+        p_prod.set_out_handle(work)                  # in place on scratch
+        p_prod.set_launch_parameters(
+            ComplexElementProdParams(conjugate=True, use_pallas=self.use_pallas))
+
+        p_sum = XImageSum(app)
+        p_sum.set_in_handle(work)
+        p_sum.set_out_handle(self.out_handle)
+        p_sum.set_launch_parameters(CombineParams(use_pallas=self.use_pallas))
+
+        self.chain = ProcessChain(app, [p_ifft, p_prod, p_sum], mode=self.mode)
+        self.chain.init()
+        self._initialized = True
+
+    def launch(self, profile: ProfileParameters | None = None) -> None:
+        if not self._initialized:
+            self.init()
+        self.chain.launch(profile)

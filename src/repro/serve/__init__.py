@@ -1,0 +1,3 @@
+from .engine import ServeEngine, SamplingConfig, make_decode_fn, make_prefill_fn
+
+__all__ = ["SamplingConfig", "ServeEngine", "make_decode_fn", "make_prefill_fn"]

@@ -1,0 +1,14 @@
+from .step import (
+    TrainConfig,
+    TrainProcess,
+    batch_pspecs,
+    make_train_state,
+    make_train_step,
+    state_pspecs,
+    to_named,
+)
+from .trainer import StepTimeout, Trainer, TrainerConfig
+
+__all__ = ["StepTimeout", "TrainConfig", "TrainProcess", "Trainer",
+           "TrainerConfig", "batch_pspecs", "make_train_state",
+           "make_train_step", "state_pspecs", "to_named"]

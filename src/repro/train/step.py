@@ -1,0 +1,169 @@
+"""Train-step factory: loss + grad-accumulation + AdamW, sharding-annotated.
+
+The step is exposed as a paper-style Process (init = AOT lower+compile on
+the mesh, launch = run) via :class:`TrainProcess`; ``make_train_step``
+returns the raw pure function for direct jit/lowering (the dry-run path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import BATCH_AXES, DATA, MODEL, partition_tree, zero1_spec, tree_paths
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import ef_int8_compress
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    compress_grads: bool = False   # int8 error-feedback on the DP reduce
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def make_train_state(model, rng, compress: bool = False) -> Dict[str, Any]:
+    params = model.init_params(rng)
+    state = {"params": params, "opt": adamw_init(params)}
+    if compress:
+        state["ef"] = init_ef_buffers(params)
+    return state
+
+
+def init_ef_buffers(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def make_train_step(model, tcfg: TrainConfig):
+    """Pure (state, batch) -> (state, metrics).  Microbatch grad-accum via
+    scan; optional int8 EF compression applied to accumulated grads before
+    the (GSPMD-inserted) DP reduction of the optimizer update."""
+
+    def loss_fn(params, mb):
+        return model.loss_fn(params, mb)
+
+    def step(state, batch):
+        params = state["params"]
+        m = tcfg.microbatches
+        if m > 1:
+            mb_batch = jax.tree.map(
+                lambda a: a.reshape((m, a.shape[0] // m) + a.shape[1:]), batch)
+
+            def accum(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(accum, (g0, 0.0), mb_batch)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            metrics = jax.tree.map(lambda x: x[-1], metrics)
+            metrics["loss"] = loss_sum / m
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+
+        if tcfg.compress_grads:
+            # error-feedback int8 quantization of the gradient signal; the
+            # EF buffer lives in the state so the bias telescopes
+            def q(g, e):
+                qi, scale, new_e = ef_int8_compress(g, e)
+                return qi.astype(jnp.float32) * scale, new_e
+
+            flat_g = tree_paths(grads)
+            flat_e = tree_paths(state["ef"])
+            new_g, new_e = {}, {}
+            for k in flat_g:
+                new_g[k], new_e[k] = q(flat_g[k], flat_e[k])
+            grads = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(grads), [new_g[k] for k in flat_g])
+            ef = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(state["ef"]), [new_e[k] for k in flat_e])
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], tcfg.opt)
+        new_state = {"params": new_params, "opt": new_opt}
+        if tcfg.compress_grads:
+            new_state["ef"] = ef
+        metrics = {**metrics, **opt_metrics}
+        return new_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+def state_pspecs(model, state) -> Any:
+    """PartitionSpec tree for a train state."""
+    rules = model.partition_rules()
+    param_specs = partition_tree(state["params"], rules)
+
+    def opt_spec(spec_tree, tree):
+        return jax.tree.map(
+            lambda spec, leaf: zero1_spec(spec, np.shape(leaf)),
+            spec_tree, tree)
+
+    specs = {
+        "params": param_specs,
+        "opt": {
+            "master": opt_spec(param_specs, state["opt"]["master"]),
+            "m": opt_spec(param_specs, state["opt"]["m"]),
+            "v": opt_spec(param_specs, state["opt"]["v"]),
+            "step": P(),
+        },
+    }
+    if "ef" in state:
+        specs["ef"] = opt_spec(param_specs, state["ef"])
+    return specs
+
+
+def batch_pspecs(batch) -> Any:
+    return jax.tree.map(lambda a: P(BATCH_AXES, *([None] * (np.ndim(a) - 1))), batch)
+
+
+def to_named(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Paper-style Process wrapper (init/launch split at the train-step level)
+# ---------------------------------------------------------------------------
+
+class TrainProcess:
+    """OpenCLIPER Process semantics for the training step: ``init()`` AOT
+    lowers + compiles for the mesh (the 'plan baking'); ``launch()`` only
+    executes.  Chaining steps is zero-copy: state buffers are donated."""
+
+    def __init__(self, model, tcfg: TrainConfig, mesh):
+        self.model, self.tcfg, self.mesh = model, tcfg, mesh
+        self._compiled = None
+
+    def init(self, state, batch):
+        from repro.core.process import aot_compile
+
+        step = make_train_step(self.model, self.tcfg)
+        sspec = state_pspecs(self.model, state)
+        bspec = batch_pspecs(batch)
+        in_shardings = (to_named(sspec, self.mesh), to_named(bspec, self.mesh))
+        out_shardings = (to_named(sspec, self.mesh), None)
+        specs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(np.shape(a), a.dtype), (state, batch))
+        self._compiled = aot_compile(
+            step, specs, tag=f"train:{self.model.cfg.name}",
+            donate_argnums=(0,), static_key=repr(self.tcfg), mesh=self.mesh,
+            in_shardings=in_shardings, out_shardings=out_shardings)
+        return self
+
+    def launch(self, state, batch):
+        if self._compiled is None:
+            raise RuntimeError("TrainProcess.init() not called")
+        return self._compiled(state, batch)

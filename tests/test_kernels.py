@@ -1,0 +1,151 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+All kernels run in interpret mode on CPU (same blocking/grid semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.coil_combine import rss, ximage_sum
+from repro.kernels.complex_elementprod import complex_elementprod
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.negate import negate
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.wkv6 import wkv6
+
+
+def _c(rng, shape):
+    return (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)
+            ).astype(np.complex64)
+
+
+@pytest.mark.parametrize("shape", [(7,), (128,), (3, 5, 17), (160, 160), (1,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_negate(rng, shape, dtype):
+    x = jnp.asarray(rng.random(shape), dtype)
+    np.testing.assert_allclose(
+        np.asarray(negate(x), np.float32),
+        np.asarray(ref.negate(x), np.float32), rtol=1e-6)
+
+
+@pytest.mark.parametrize("fcwh", [(16, 8, 160, 160), (2, 3, 24, 20), (1, 1, 8, 8)])
+@pytest.mark.parametrize("conj", [False, True])
+def test_complex_elementprod(rng, fcwh, conj):
+    f, c, h, w = fcwh
+    a = _c(rng, (f, c, h, w))
+    b = _c(rng, (c, h, w))
+    got = np.asarray(complex_elementprod(jnp.asarray(a), jnp.asarray(b), conj))
+    want = np.asarray(ref.complex_elementprod(jnp.asarray(a), jnp.asarray(b), conj))
+    np.testing.assert_allclose(got, want, rtol=2e-6, atol=1e-5)
+
+
+def test_complex_elementprod_same_shape(rng):
+    a, b = _c(rng, (4, 6, 6)), _c(rng, (4, 6, 6))
+    got = np.asarray(complex_elementprod(jnp.asarray(a), jnp.asarray(b), True))
+    np.testing.assert_allclose(got, a * np.conj(b), rtol=2e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("fcwh", [(16, 8, 160, 160), (3, 4, 33, 17)])
+def test_coil_combine(rng, fcwh):
+    x = _c(rng, fcwh)
+    np.testing.assert_allclose(
+        np.asarray(ximage_sum(jnp.asarray(x))),
+        np.asarray(ref.ximage_sum(jnp.asarray(x))), rtol=2e-6, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(rss(jnp.asarray(x))),
+        np.asarray(ref.rss(jnp.asarray(x))), rtol=2e-6, atol=2e-5)
+
+
+def test_rss_real_input(rng):
+    x = rng.standard_normal((3, 4, 9, 11)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(rss(jnp.asarray(x))),
+        np.asarray(ref.rss(jnp.asarray(x))), rtol=2e-6, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(4, 64), (2, 3, 96), (17, 128), (1, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(rng, shape, dtype):
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    w = jnp.asarray(rng.standard_normal(shape[-1]), jnp.float32)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, w), np.float32),
+        np.asarray(ref.rmsnorm(x, w), np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,skv,d,causal,window",
+    [
+        (2, 4, 2, 32, 32, 16, True, None),    # GQA causal
+        (1, 4, 4, 24, 24, 8, False, None),    # MHA bidirectional + padding
+        (2, 8, 2, 16, 48, 16, True, None),    # kv longer than q (chunked KV)
+        (1, 2, 2, 1, 40, 8, True, None),      # single-token decode
+        (1, 4, 2, 32, 32, 16, True, 8),       # sliding window
+        (1, 4, 2, 33, 47, 16, True, 13),      # ragged + window
+    ])
+def test_flash_attention(rng, b, hq, hkv, sq, skv, d, causal, window):
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, skv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, skv, d)), jnp.float32)
+    got = np.asarray(flash_attention(q, k, v, causal=causal, window=window,
+                                     block_q=16, block_k=16))
+    want = np.asarray(ref.attention(q, k, v, causal=causal, window=window))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16(rng):
+    q = jnp.asarray(rng.standard_normal((1, 2, 16, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 16, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 16, 32)), jnp.bfloat16)
+    got = np.asarray(flash_attention(q, k, v, block_q=8, block_k=8), np.float32)
+    want = np.asarray(ref.attention(q, k, v), np.float32)
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+def test_ref_attention_chunked_equals_dense(rng, monkeypatch):
+    """The q-chunked long-context path must equal the dense path."""
+    monkeypatch.setattr(ref, "ATTN_CHUNK_THRESHOLD", 64)
+    monkeypatch.setattr(ref, "ATTN_CHUNK", 32)
+    b, h, s, d = 1, 2, 64, 16
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    chunked = ref.attention(q, k, v, causal=True)   # takes the scan path
+    with ref.unchunked_attention():
+        dense = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=2e-5, atol=2e-5)
+    # windowed variant too
+    cw = ref.attention(q, k, v, causal=True, window=10)
+    with ref.unchunked_attention():
+        dw = ref.attention(q, k, v, causal=True, window=10)
+    np.testing.assert_allclose(np.asarray(cw), np.asarray(dw),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,t,h,d,bt", [(2, 20, 3, 8, 8), (1, 16, 2, 16, 4)])
+def test_wkv6(rng, b, t, h, d, bt):
+    r, k, v = (jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.standard_normal((b, t, h, d)) * 0.5, jnp.float32)
+    u = jnp.asarray(rng.standard_normal((h, d)), jnp.float32)
+    got, gs = wkv6(r, k, v, w, u, block_t=bt)
+    want, ws = ref.wkv6(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), rtol=2e-5, atol=2e-5)
+
+
+def test_wkv6_chunked_state_passing(rng):
+    b, t, h, d = 2, 16, 2, 8
+    r, k, v = (jnp.asarray(rng.standard_normal((b, t, h, d)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.standard_normal((b, t, h, d)) * 0.5, jnp.float32)
+    u = jnp.asarray(rng.standard_normal((h, d)), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((b, h, d, d)), jnp.float32)
+    o1, s1 = wkv6(r[:, :8], k[:, :8], v[:, :8], w[:, :8], u, s0, block_t=4)
+    o2, s2 = wkv6(r[:, 8:], k[:, 8:], v[:, 8:], w[:, 8:], u, s1, block_t=4)
+    wo, wsf = ref.wkv6(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.concatenate([o1, o2], 1), np.asarray(wo),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(wsf), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,140 @@
+"""Process semantics: init/launch split, zero-copy chaining, staged==fused,
+compile cache, donation — the paper's §III-A.3 behaviours."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CLapp, Data, DeviceTraits, PlatformTraits, Process,
+                        ProcessChain, ProfileParameters, SyncSource, XData,
+                        compile_cache_stats)
+
+
+class AddConst(Process):
+    def apply(self, views, aux, params):
+        c = params if params is not None else 1.0
+        return {k: v + c for k, v in views.items()}
+
+
+class Scale(Process):
+    def apply(self, views, aux, params):
+        return {k: v * params for k, v in views.items()}
+
+
+@pytest.fixture
+def app():
+    return CLapp().init(PlatformTraits(), DeviceTraits())
+
+
+def _data(rng, shape=(16, 16)):
+    return XData({"img": rng.standard_normal(shape).astype(np.float32)})
+
+
+def test_init_launch_split_and_overhead(app, rng):
+    """init() pays compilation; launch() must be orders faster."""
+    d_in, d_out = _data(rng), None
+    h_in = app.addData(d_in)
+    d_out = XData(d_in, copy_values=False)
+    h_out = app.addData(d_out)
+    p = AddConst(app)
+    p.set_in_handle(h_in)
+    p.set_out_handle(h_out)
+    p.set_launch_parameters(2.5)
+    t0 = time.perf_counter()
+    p.init()
+    t_init = time.perf_counter() - t0
+    prof = ProfileParameters(enable=True)
+    for _ in range(20):
+        p.launch(prof)
+    assert prof.mean < t_init, "launch must be cheaper than init (plan baking)"
+    app.device2Host(h_out)
+    np.testing.assert_allclose(d_out.get_ndarray(0).host,
+                               d_in.get_ndarray(0).host + 2.5, rtol=1e-6)
+
+
+def test_chain_staged_equals_fused(app, rng):
+    base = rng.standard_normal((8, 8)).astype(np.float32)
+    results = {}
+    for mode in ("staged", "fused"):
+        d_in = XData({"img": base.copy()})
+        d_mid = XData(d_in, copy_values=False)
+        d_out = XData(d_in, copy_values=False)
+        h_in, h_mid, h_out = (app.addData(x) for x in (d_in, d_mid, d_out))
+        p1 = AddConst(app); p1.set_in_handle(h_in); p1.set_out_handle(h_mid)
+        p1.set_launch_parameters(1.0)
+        p2 = Scale(app); p2.set_in_handle(h_mid); p2.set_out_handle(h_out)
+        p2.set_launch_parameters(3.0)
+        chain = ProcessChain(app, [p1, p2], mode=mode)
+        chain.init()
+        chain.launch()
+        app.device2Host(h_out)
+        results[mode] = d_out.get_ndarray(0).host.copy()
+    np.testing.assert_allclose(results["staged"], results["fused"], rtol=1e-6)
+    np.testing.assert_allclose(results["staged"], (base + 1.0) * 3.0, rtol=1e-6)
+
+
+def test_in_place_donation(app, rng):
+    """out_handle == in_handle: the blob is donated, result lands in place."""
+    d = _data(rng)
+    orig = d.get_ndarray(0).host.copy()
+    h = app.addData(d)
+    p = AddConst(app)
+    p.set_in_handle(h)
+    p.set_out_handle(h)
+    p.set_launch_parameters(5.0)
+    p.init()
+    p.launch()
+    app.device2Host(h)
+    np.testing.assert_allclose(d.get_ndarray(0).host, orig + 5.0, rtol=1e-6)
+
+
+def test_compile_cache_hits(app, rng):
+    """Same process class + same layout + same params = one compilation."""
+    h0, m0 = compile_cache_stats()
+    for _ in range(3):
+        d_in = _data(rng)
+        d_out = XData(d_in, copy_values=False)
+        h_in, h_out = app.addData(d_in), app.addData(d_out)
+        p = Scale(app)
+        p.set_in_handle(h_in); p.set_out_handle(h_out)
+        p.set_launch_parameters(2.0)
+        p.init()
+        p.launch()
+    h1, m1 = compile_cache_stats()
+    assert m1 - m0 == 1, "one miss (first init)"
+    assert h1 - h0 == 2, "subsequent inits must hit the cache"
+
+
+def test_parameter_change_triggers_reinit(app, rng):
+    d_in = _data(rng)
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = Scale(app)
+    p.set_in_handle(h_in); p.set_out_handle(h_out)
+    p.set_launch_parameters(2.0)
+    p.init(); p.launch()
+    app.device2Host(h_out)
+    r1 = d_out.get_ndarray(0).host.copy()
+    p.set_launch_parameters(4.0)   # paper: parameters may vary per call
+    p.init(); p.launch()
+    app.device2Host(h_out)
+    r2 = d_out.get_ndarray(0).host.copy()
+    np.testing.assert_allclose(r2, r1 * 2.0, rtol=1e-6)
+
+
+def test_heterogeneous_data_single_transfer(app, rng):
+    """Arbitrarily heterogeneous Data moves as ONE buffer (paper §III-A.2)."""
+    d = Data({"vol": rng.standard_normal((2, 3, 4)).astype(np.float32),
+              "mask": rng.integers(0, 2, (3, 4)).astype(np.uint8),
+              "kspace": (rng.standard_normal((4, 4))
+                         + 1j * rng.standard_normal((4, 4))).astype(np.complex64)})
+    h = app.addData(d)
+    assert d.device_blob is not None and d.device_blob.ndim == 1
+    views = d.device_views()
+    assert set(views) == {"vol", "mask", "kspace"}
+    for name in views:
+        np.testing.assert_array_equal(
+            np.asarray(views[name]),
+            np.asarray([a.host for a in d if a.name == name][0]))
