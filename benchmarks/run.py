@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm]
+    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm stream]
 """
 from __future__ import annotations
 
@@ -10,7 +10,8 @@ import sys
 
 
 def main() -> None:
-    which = set(sys.argv[1:]) or {"table1", "fig2", "overhead", "roofline", "lm"}
+    which = set(sys.argv[1:]) or {"table1", "fig2", "overhead", "roofline",
+                                  "lm", "stream"}
     print("name,us_per_call,derived")
     rows = []
     if "table1" in which:
@@ -28,6 +29,9 @@ def main() -> None:
     if "lm" in which:
         from benchmarks.lm_step import rows as lm_rows
         rows += lm_rows()
+    if "stream" in which:
+        from benchmarks.stream_throughput import rows as stream_rows
+        rows += stream_rows()
     for r in rows:
         print(r)
 

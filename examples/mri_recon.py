@@ -5,7 +5,14 @@ matching §IV-B), reconstructs M = sum_i conj(S_i) . IFFT(Y_i) through the
 SimpleMRIRecon process chain, verifies against a pure-numpy oracle, and
 saves the output in the .mat-analogue (npz) container.
 
+``--stream N`` additionally reconstructs a stack of N independent slice
+acquisitions through the streaming executor (``Process.stream``): host
+blobs are double-buffered to the device while earlier batches compute, and
+each batch of slices runs as ONE vmapped launch.  Results are verified to
+be bit-identical to the sequential launch() path.
+
 Run:  PYTHONPATH=src python examples/mri_recon.py [--fused] [--pallas]
+                                                  [--stream N] [--batch K]
 """
 import sys
 import time
@@ -46,9 +53,58 @@ def oracle_recon(kdata: np.ndarray, smaps: np.ndarray) -> np.ndarray:
     return (np.conj(smaps)[None] * x).sum(axis=1)
 
 
+def _argval(flag: str, default: int) -> int:
+    if flag not in sys.argv:
+        return default
+    idx = sys.argv.index(flag) + 1
+    if idx >= len(sys.argv) or sys.argv[idx].startswith("-"):
+        sys.exit(f"usage: {flag} requires an integer value, e.g. {flag} 8")
+    try:
+        return int(sys.argv[idx])
+    except ValueError:
+        sys.exit(f"usage: {flag} requires an integer value, "
+                 f"got {sys.argv[idx]!r}")
+
+
+def stream_slice_stack(app, proc, cfg, n_slices: int, batch: int) -> None:
+    """Reconstruct a stack of independent slice acquisitions via the
+    streaming executor and verify bit-identity with sequential launch()."""
+    slices = []
+    for s in range(n_slices):
+        k, smaps, _ = synthetic_kdata(cfg.frames, cfg.coils, cfg.height,
+                                      cfg.width, seed=100 + s)
+        slices.append(KData({"kdata": k, "sensitivity_maps": smaps}))
+
+    import jax
+    t0 = time.perf_counter()
+    outs = proc.stream(slices, batch=batch)
+    jax.block_until_ready([o.device_blob for o in outs])
+    t_stream = time.perf_counter() - t0
+    print(f"[stream] {n_slices} slices, batch={batch}: "
+          f"{t_stream * 1e3:.1f} ms total, "
+          f"{t_stream / n_slices * 1e3:.2f} ms/slice")
+
+    # spot-check one slice against the sequential oracle, bitwise via the
+    # framework and numerically via numpy
+    d_in = app.getData(proc.in_handle)
+    for dst, src in zip(d_in, slices[-1]):
+        dst.set_host(src.host)
+    app.host2device(proc.in_handle)
+    proc.launch()
+    seq = np.asarray(app.getData(proc.out_handle).device_views()["xdata"])
+    got = np.asarray(outs[-1].device_view("xdata"))
+    assert np.array_equal(got, seq), "streamed result must be bit-identical"
+    want = oracle_recon(np.asarray(slices[-1].kdata.host),
+                        np.asarray(slices[-1].smaps.host))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    print("[stream] bit-identical to sequential launch(), oracle verified")
+
+
 def main() -> None:
     mode = "fused" if "--fused" in sys.argv else "staged"
     use_pallas = "--pallas" in sys.argv
+    n_stream = _argval("--stream", 0)
+    batch = _argval("--batch", 4)
     cfg = CONFIG
 
     app = CLapp()
@@ -86,6 +142,9 @@ def main() -> None:
 
     data_out.matlab_save("outputFrames.npz", "XData", SyncSource.HOST_ONLY)
     print("saved outputFrames.npz")
+
+    if n_stream:
+        stream_slice_stack(app, proc, cfg, n_stream, batch)
 
 
 if __name__ == "__main__":

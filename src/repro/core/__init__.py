@@ -28,22 +28,26 @@ from .arena import (
 )
 from .data import Data, KData, NDArray, XData
 from .process import (
+    DonatedBufferError,
     Process,
     ProcessChain,
     ProfileParameters,
+    PureLaunchable,
     aot_compile,
     compile_cache_stats,
 )
 from .registry import KernelCompileError, KernelEntry, KernelRegistry, kernel
+from .stream import BatchedProcess, StreamQueue, stream_launch
 from .sync import Coherence, SyncSource
 
 __all__ = [
-    "ALIGN", "ArenaEntry", "ArenaLayout", "CLapp", "CLIPERApp", "Coherence",
-    "Data", "DataHandle", "DeviceTraits", "DeviceType", "INVALID_HANDLE",
-    "KData", "KernelCompileError", "KernelEntry", "KernelRegistry", "NDArray",
+    "ALIGN", "ArenaEntry", "ArenaLayout", "BatchedProcess", "CLapp",
+    "CLIPERApp", "Coherence", "Data", "DataHandle", "DeviceTraits",
+    "DeviceType", "DonatedBufferError", "INVALID_HANDLE", "KData",
+    "KernelCompileError", "KernelEntry", "KernelRegistry", "NDArray",
     "NoMatchingDeviceError", "PlatformTraits", "Process", "ProcessChain",
-    "ProfileParameters", "SyncSource", "XData", "aot_compile",
-    "compile_cache_stats", "device_view", "kernel", "pack_device", "pack_host",
-    "pack_tree_host", "plan_layout", "unpack_device", "unpack_host",
-    "unpack_tree_host",
+    "ProfileParameters", "PureLaunchable", "StreamQueue", "SyncSource",
+    "XData", "aot_compile", "compile_cache_stats", "device_view", "kernel",
+    "pack_device", "pack_host", "pack_tree_host", "plan_layout",
+    "stream_launch", "unpack_device", "unpack_host", "unpack_tree_host",
 ]

@@ -71,6 +71,9 @@ class CLapp:
         self._next_handle: DataHandle = 0
         self.kernels = KernelRegistry()
         self._initialized = False
+        # handle -> coherence state to settle into once the dispatched
+        # host->device transfer lands (see host2device(wait=False))
+        self._in_flight: Dict[DataHandle, Coherence] = {}
 
     # ------------------------------------------------------------------ init
     def init(self, platform_traits: PlatformTraits | None = None,
@@ -152,10 +155,19 @@ class CLapp:
 
     def delData(self, handle: DataHandle) -> None:
         data = self._data.pop(handle, None)
+        self._in_flight.pop(handle, None)
         if data is not None:
             data.device_blob = None  # drop device reference
 
-    def host2device(self, handle: DataHandle) -> None:
+    def host2device(self, handle: DataHandle, *, wait: bool = True) -> None:
+        """Pack + transfer a Data set in one call (the paper's single-call
+        transfer).  ``jax.device_put`` is asynchronous either way; with the
+        default ``wait=True`` the Data's coherence is stamped with its final
+        state immediately (readers block transparently, the pre-streaming
+        behaviour).  ``wait=False`` is the streaming path: the handle is
+        marked ``Coherence.TRANSFERRING`` and tracked in flight, so a later
+        ``wait_transfers()`` is the ONLY blocking sync point — this lets
+        batch *i+1*'s upload overlap batch *i*'s compute."""
         data = self.getData(handle)
         if data.layout is None:
             data.plan()
@@ -166,13 +178,35 @@ class CLapp:
             blob = np.zeros(data.layout.total_bytes, dtype=np.uint8)
             coherence = Coherence.DEVICE_FRESH
         data.device_blob = jax.device_put(blob, self.device)
-        data.coherence = coherence
+        if wait:
+            self._in_flight.pop(handle, None)
+            data.coherence = coherence
+        else:
+            data.coherence = Coherence.TRANSFERRING
+            self._in_flight[handle] = coherence
+
+    def wait_transfers(self, handles: Optional[Sequence[DataHandle]] = None) -> None:
+        """Explicit sync point: block until the dispatched host->device
+        transfers of ``handles`` (default: all in-flight) have landed, then
+        settle their coherence states."""
+        todo = list(self._in_flight) if handles is None else \
+            [h for h in handles if h in self._in_flight]
+        for h in todo:
+            data = self.getData(h)
+            if data.device_blob is not None:
+                jax.block_until_ready(data.device_blob)
+            data.coherence = self._in_flight.pop(h)
+
+    @property
+    def in_flight_handles(self) -> List[DataHandle]:
+        return sorted(self._in_flight)
 
     def device2Host(self, handle: DataHandle,
                     sync: SyncSource = SyncSource.BUFFER_ONLY) -> None:
         data = self.getData(handle)
         if sync is SyncSource.HOST_ONLY:
             return  # host already authoritative
+        self.wait_transfers([handle])
         data.sync_to_host()
 
     # internal: processes replace a Data's device blob after computing
@@ -180,6 +214,7 @@ class CLapp:
         data = self.getData(handle)
         data.device_blob = blob
         data.coherence = Coherence.DEVICE_FRESH
+        self._in_flight.pop(handle, None)  # old upload superseded
 
     @property
     def data_handles(self) -> List[DataHandle]:

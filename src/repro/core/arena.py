@@ -208,6 +208,29 @@ def pack_device(arrays: Mapping[str, jax.Array], layout: ArenaLayout) -> jax.Arr
 
 
 # ---------------------------------------------------------------------------
+# Batched layouts: k identical arenas stacked on a leading axis (streaming)
+# ---------------------------------------------------------------------------
+
+def batched_spec(layout: ArenaLayout, batch: int) -> jax.ShapeDtypeStruct:
+    """AOT spec for ``batch`` stacked arena blobs: ``(batch, total_bytes)``
+    uint8.  The per-item layout is unchanged — a vmapped program sees each
+    row as one ordinary 1-D arena blob."""
+    return jax.ShapeDtypeStruct((int(batch), layout.total_bytes), np.uint8)
+
+
+def stack_host_blobs(blobs: Sequence[np.ndarray], layout: ArenaLayout) -> np.ndarray:
+    """Stack per-item host blobs into one contiguous ``(k, total_bytes)``
+    array — the single-call batched transfer (one ``device_put`` moves k
+    Data sets; fewer, larger DMAs, as the paper prescribes per set)."""
+    for b in blobs:
+        if b.shape != (layout.total_bytes,) or b.dtype != np.uint8:
+            raise ValueError(
+                f"blob shape {b.shape}/{b.dtype} does not match layout "
+                f"({layout.total_bytes},)/uint8")
+    return np.stack(blobs, axis=0)
+
+
+# ---------------------------------------------------------------------------
 # Pytree arenas: pack any pytree of arrays (used by repro.ckpt)
 # ---------------------------------------------------------------------------
 

@@ -129,6 +129,27 @@ class Data:
     def names(self) -> List[str]:
         return [a.name for a in self._arrays]
 
+    # -- construction helpers --------------------------------------------------
+    @classmethod
+    def from_layout(cls, layout: ArenaLayout) -> "Data":
+        """Spec-only Data matching an existing arena layout (names, shapes,
+        dtypes; no host values).  Used by the streaming executor to build
+        per-item output containers that alias rows of a batched result."""
+        d = cls(None)
+        for e in layout.entries:
+            d.add(NDArray(shape=e.shape, dtype=e.dtype, name=e.name))
+        d.layout = layout
+        return d
+
+    def spec_clone(self) -> "Data":
+        """Same-shaped, spec-only copy of this Data (the paper's
+        ``XData(src, copy_values=False)`` generalised to any Data)."""
+        d = Data(None)
+        for a in self._arrays:
+            d.add(NDArray(shape=a.shape, dtype=a.dtype, name=a.name))
+        d.layout = self.layout
+        return d
+
     # -- layout / packing -----------------------------------------------------
     def plan(self) -> ArenaLayout:
         self.layout = plan_layout((a.name, a.shape, a.dtype) for a in self._arrays)

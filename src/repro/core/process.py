@@ -18,6 +18,21 @@ Beyond the paper: a :class:`ProcessChain` can be *fused* — the composed
 stages are traced as one program, letting XLA fuse across stage boundaries
 (impossible with OpenCL's per-kernel dispatch).  Staged mode is the
 paper-faithful baseline; fused mode is the measured beyond-paper gain.
+
+Streaming (beyond-paper, production-shaped): every Process exposes
+:meth:`Process.stream`, which runs MANY independent Data sets through the
+one compiled program — batched along a leading axis (one launch per k data
+sets via ``vmap``) and double-buffered (batch *i+1*'s arena blob is in
+flight to the device while batch *i* executes).  See
+:mod:`repro.core.stream` for the executor pieces (StreamQueue /
+BatchedProcess).  The single-shot ``init()/launch()`` API stays intact as
+the paper-faithful baseline.
+
+Donation safety: a program compiled in-place (``out_handle == in_handle``)
+donates its input buffer to XLA.  ``launch()`` refuses to run such a
+program after the handles were re-wired to out != in without ``init()``
+(use-after-donate would silently hand the caller's live blob to XLA); see
+:class:`DonatedBufferError`.
 """
 from __future__ import annotations
 
@@ -96,6 +111,33 @@ def aot_compile(fn: Callable, specs: Sequence[Any], *, tag: str,
     return compiled
 
 
+class DonatedBufferError(RuntimeError):
+    """A process compiled with input donation (in-place) was launched after
+    its handles were re-wired to out != in.  Running it would donate the
+    caller's live input blob to XLA; call ``init()`` again to recompile for
+    the new wiring."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PureLaunchable:
+    """A Process lowered to its pure, launchable form.
+
+    ``fn(blob_in, *aux_blobs) -> blob_out`` plus everything needed to
+    compile and feed it: arena layouts, the aux Data handles in positional
+    order, the compile-cache tag/static key, and whether the program is
+    in-place (input donated).  This is the unit shared by ``init()``
+    (single-shot AOT), fused chains, and the batched/streaming executor.
+    """
+
+    fn: Callable
+    in_layout: ArenaLayout
+    out_layout: ArenaLayout
+    aux_handles: Tuple[DataHandle, ...]
+    tag: str
+    static_key: Any
+    in_place: bool
+
+
 class Process:
     """Base class for operators.  Subclasses implement :meth:`apply` (a pure
     function from named device views to named output arrays) and optionally
@@ -112,6 +154,7 @@ class Process:
         self.launch_params: Any = None
         self.kernel: Optional[Callable] = None
         self._compiled = None
+        self._compiled_in_place = False
         self._initialized = False
 
     # -- wiring (paper: setInHandle / setOutHandle / setLaunchParameters) ----
@@ -192,43 +235,82 @@ class Process:
 
         return fn, in_layout, out_layout, aux_names
 
+    def launchable(self) -> PureLaunchable:
+        """Lower this process to its :class:`PureLaunchable` form — the one
+        representation used by ``init()``, fused chains, and streaming."""
+        fn, in_layout, out_layout, aux_names = self.pure_fn()
+        return PureLaunchable(
+            fn=fn,
+            in_layout=in_layout,
+            out_layout=out_layout,
+            aux_handles=tuple(self.aux_handles[n] for n in aux_names),
+            tag=f"{type(self).__module__}.{type(self).__name__}",
+            static_key=self._static_key(),
+            in_place=self.out_handle == self.in_handle,
+        )
+
+    def _current_aux_handles(self) -> Tuple[DataHandle, ...]:
+        """The aux handles the compiled program's positional aux args map to,
+        read from the CURRENT wiring (sorted-name order, matching
+        :meth:`launchable`)."""
+        return tuple(self.aux_handles[n] for n in sorted(self.aux_handles))
+
     # -- init / launch ----------------------------------------------------------
+    def _aux_specs(self, la: PureLaunchable) -> List[jax.ShapeDtypeStruct]:
+        app = self.getApp()
+        specs = []
+        for h in la.aux_handles:
+            d = app.getData(h)
+            if d.layout is None:
+                d.plan()
+            specs.append(jax.ShapeDtypeStruct((d.layout.total_bytes,), np.uint8))
+        return specs
+
     def init(self) -> None:
         """One-time work: resolve kernels, trace and AOT-compile."""
         app = self.getApp()
         for name in self.kernel_names:
             app.kernels.load(name)  # module names; idempotent
-        fn, in_layout, out_layout, aux_names = self.pure_fn()
-        in_place = self.out_handle == self.in_handle
-        specs = [jax.ShapeDtypeStruct((in_layout.total_bytes,), np.uint8)] + [
-            jax.ShapeDtypeStruct(
-                (self.getApp().getData(self.aux_handles[n]).layout.total_bytes,), np.uint8
-            )
-            for n in aux_names
-        ]
+        la = self.launchable()
+        specs = [jax.ShapeDtypeStruct((la.in_layout.total_bytes,), np.uint8)]
+        specs += self._aux_specs(la)
         self._compiled = aot_compile(
-            fn,
+            la.fn,
             specs,
-            tag=f"{type(self).__module__}.{type(self).__name__}",
-            donate_argnums=(0,) if in_place else (),
-            static_key=self._static_key(),
+            tag=la.tag,
+            donate_argnums=(0,) if la.in_place else (),
+            static_key=la.static_key,
             mesh=app.mesh,
         )
+        self._compiled_in_place = la.in_place
         self._initialized = True
+
+    def _check_donation(self) -> None:
+        if self._compiled_in_place and self.out_handle != self.in_handle:
+            raise DonatedBufferError(
+                f"{type(self).__name__} was compiled in-place "
+                f"(donate_argnums=(0,)) but is now wired out_handle="
+                f"{self.out_handle} != in_handle={self.in_handle}; launching "
+                "would donate the caller's live input blob.  Call init() to "
+                "recompile for the new wiring.")
 
     def launch(self, profile: ProfileParameters | None = None) -> None:
         """Hot path: execute the compiled program.  No tracing, no transfer."""
         if not self._initialized or self._compiled is None:
             self.init()  # lazily init, but callers should init() explicitly
+        self._check_donation()
         app = self.getApp()
         din = app.getData(self.in_handle)
         if din.device_blob is None:
             app.host2device(self.in_handle)
         aux_blobs = []
-        for name in sorted(self.aux_handles):
-            d = app.getData(self.aux_handles[name])
+        # aux handles are read live (not snapshotted at init) so re-wiring an
+        # aux to a same-layout Data between launches takes effect, as it
+        # always did; order matches launchable()'s positional aux order
+        for h in self._current_aux_handles():
+            d = app.getData(h)
             if d.device_blob is None:
-                app.host2device(self.aux_handles[name])
+                app.host2device(h)
             aux_blobs.append(d.device_blob)
         t0 = time.perf_counter()
         out_blob = self._compiled(din.device_blob, *aux_blobs)
@@ -238,6 +320,25 @@ class Process:
         if self.out_handle == self.in_handle:
             din.device_blob = None  # donated
         app._set_device_blob(self.out_handle, out_blob)
+
+    # -- streaming (beyond paper; see repro.core.stream) -----------------------
+    def stream(self, datasets: Sequence[Any], batch: int = 1, *,
+               depth: int = 2, sync: bool = False,
+               profile: ProfileParameters | None = None) -> List[Any]:
+        """Run many independent input Data sets through this process.
+
+        Batches of ``batch`` data sets are packed host-side, double-buffered
+        to the device (:class:`repro.core.stream.StreamQueue`), and executed
+        as ONE launch per batch via a vmapped AOT program
+        (:class:`repro.core.stream.BatchedProcess`) that reuses the global
+        compile cache and the donation rules of this process.  Returns one
+        output Data per input, device-fresh (``sync=True`` also copies each
+        result back to its host arrays).
+        """
+        from .stream import stream_launch  # local import: avoid cycle
+
+        return stream_launch(self, datasets, batch=batch, depth=depth,
+                             sync=sync, profile=profile)
 
 
 class ProcessChain(Process):
@@ -257,16 +358,17 @@ class ProcessChain(Process):
         self.stages.append(p)
         return self
 
-    def init(self) -> None:
+    def launchable(self) -> PureLaunchable:
+        """Fused composition of the stages' pure fns as ONE launchable unit.
+
+        Used by fused ``init()``, and by :meth:`Process.stream` for chains in
+        *either* mode — streaming always executes the fused composition,
+        which is mathematically identical to running the stages one by one
+        (stage outputs feed stage inputs by handle, zero copies).
+        """
         if not self.stages:
             raise ValueError("empty chain")
         app = self.getApp()
-        if self.mode == "staged":
-            for s in self.stages:
-                s.init()
-            self._initialized = True
-            return
-        # fused: compose the stages' pure fns into one program
         parts = []
         for s in self.stages:
             for name in s.kernel_names:
@@ -286,23 +388,61 @@ class ProcessChain(Process):
                 blobs[s.out_handle] = fn(src, *aux)
             return blobs[last_out]
 
-        in_layout = app.getData(first_in).layout or app.getData(first_in).plan()
-        specs = [jax.ShapeDtypeStruct((in_layout.total_bytes,), np.uint8)]
+        aux_handles: List[DataHandle] = []
         static_parts = []
+        # canonical wiring topology: handles renumbered by first occurrence,
+        # so logically identical chains share a cache entry while chains
+        # that route the same stages differently (e.g. p2 reading stage-1's
+        # output vs the chain input) do NOT collide on one executable
+        handle_ids: Dict[DataHandle, int] = {}
+        def _hid(h: DataHandle) -> int:
+            return handle_ids.setdefault(h, len(handle_ids))
         for s, _fn, _il, _ol, aux_names in parts:
-            static_parts.append((type(s).__name__, s._static_key()))
-            for n in aux_names:
-                d = app.getData(s.aux_handles[n])
-                if d.layout is None:
-                    d.plan()
-                specs.append(jax.ShapeDtypeStruct((d.layout.total_bytes,), np.uint8))
-        donate = (0,) if last_out == first_in else ()
-        self._compiled = aot_compile(
-            fused, specs, tag=f"ProcessChain[{len(parts)}]",
-            donate_argnums=donate, static_key=tuple(static_parts), mesh=app.mesh,
+            static_parts.append((
+                f"{type(s).__module__}.{type(s).__qualname__}",
+                s._static_key(),
+                (_hid(s.in_handle), _hid(s.out_handle)),
+            ))
+            aux_handles += [s.aux_handles[n] for n in aux_names]
+        in_layout = app.getData(first_in).layout or app.getData(first_in).plan()
+        out_layout = app.getData(last_out).layout or app.getData(last_out).plan()
+        return PureLaunchable(
+            fn=fused,
+            in_layout=in_layout,
+            out_layout=out_layout,
+            aux_handles=tuple(aux_handles),
+            tag=f"ProcessChain[{len(parts)}]",
+            static_key=tuple(static_parts),
+            in_place=last_out == first_in,
         )
-        self.in_handle, self.out_handle = first_in, last_out
+
+    def init(self) -> None:
+        if not self.stages:
+            raise ValueError("empty chain")
+        if self.mode == "staged":
+            for s in self.stages:
+                s.init()
+            self._initialized = True
+            return
+        # fused: the chain becomes a single Process over first-in/last-out
+        self.in_handle = self.stages[0].in_handle
+        self.out_handle = self.stages[-1].out_handle
+        la = self.launchable()
+        specs = [jax.ShapeDtypeStruct((la.in_layout.total_bytes,), np.uint8)]
+        specs += self._aux_specs(la)
+        self._compiled = aot_compile(
+            la.fn, specs, tag=la.tag,
+            donate_argnums=(0,) if la.in_place else (),
+            static_key=la.static_key, mesh=self.getApp().mesh,
+        )
+        self._compiled_in_place = la.in_place
         self._initialized = True
+
+    def _current_aux_handles(self) -> Tuple[DataHandle, ...]:
+        handles: List[DataHandle] = []
+        for s in self.stages:
+            handles += [s.aux_handles[n] for n in sorted(s.aux_handles)]
+        return tuple(handles)
 
     def launch(self, profile: ProfileParameters | None = None) -> None:
         if not self._initialized:
@@ -316,22 +456,4 @@ class ProcessChain(Process):
                 jax.block_until_ready(app.getData(self.stages[-1].out_handle).device_blob)
                 profile.record(time.perf_counter() - t0)
             return
-        app = self.getApp()
-        din = app.getData(self.in_handle)
-        if din.device_blob is None:
-            app.host2device(self.in_handle)
-        aux_blobs = []
-        for s in self.stages:
-            for n in sorted(s.aux_handles):
-                d = app.getData(s.aux_handles[n])
-                if d.device_blob is None:
-                    app.host2device(s.aux_handles[n])
-                aux_blobs.append(d.device_blob)
-        t0 = time.perf_counter()
-        out = self._compiled(din.device_blob, *aux_blobs)
-        if profile is not None and profile.enable:
-            jax.block_until_ready(out)
-            profile.record(time.perf_counter() - t0)
-        if self.out_handle == self.in_handle:
-            din.device_blob = None
-        app._set_device_blob(self.out_handle, out)
+        Process.launch(self, profile)

@@ -1,0 +1,218 @@
+"""Streaming executor: double-buffered transfers + batched launches.
+
+The paper's overhead story (§III-A.2) is that OpenCLIPER hides transfer
+housekeeping with pinned-memory buffer mapping so host↔device traffic can
+overlap compute.  The single-shot ``init()/launch()`` path reproduced in
+:mod:`repro.core.process` is still fully synchronous per Data set: pack,
+``device_put``, launch, repeat.  This module makes process chains
+production-shaped for many independent Data sets (MRI slice stacks,
+inference requests):
+
+* :class:`StreamQueue` — a bounded prefetching host→device feed.  While
+  batch *i* executes, batch *i+1*'s arena blob is already in flight via an
+  asynchronously dispatched ``jax.device_put``; ``block_until_ready`` only
+  happens at explicit sync points (never per item).
+
+* :class:`BatchedProcess` — AOT-compiles a process's
+  :class:`~repro.core.process.PureLaunchable` ONCE for a leading batch
+  axis: ``vmap`` over the arena-blob unpack/compute/pack, aux blobs
+  broadcast.  k independent Data sets become one launch instead of a
+  Python loop of k launches.  Reuses the global compile cache (the batch
+  size is part of the spec key) and the donation rule (in-place programs
+  donate the stacked input blob — always a transfer temporary, so donation
+  is safe by construction).
+
+* :func:`stream_launch` — the engine behind ``Process.stream(datasets,
+  batch=k)``: pack host-side, group into batches (the last batch is padded
+  by repetition so a ragged tail never triggers a second compile), feed
+  through a StreamQueue, launch batched, and scatter the per-item output
+  blobs into fresh output Data objects.
+
+Results are bit-identical to sequential ``launch()`` — the vmapped program
+runs the same per-item computation, only batched (verified in
+tests/test_stream.py and benchmarks/stream_throughput.py).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Iterable, Iterator, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from .arena import batched_spec, stack_host_blobs
+from .data import Data
+from .process import PureLaunchable, ProfileParameters, aot_compile
+from .sync import Coherence
+
+
+class StreamQueue:
+    """Bounded, double-buffered host→device transfer queue.
+
+    Wraps an iterator of host blobs (numpy arrays).  Up to ``depth`` items
+    are dispatched ahead with ``jax.device_put`` (asynchronous — JAX only
+    blocks a *reader* of the array); consuming item *i* immediately starts
+    the transfer of item *i+depth*.  ``depth=2`` is classic double
+    buffering; larger depths trade memory for more dispatch-ahead slack.
+    """
+
+    def __init__(self, items: Iterable[np.ndarray], device=None, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._it = iter(items)
+        self._device = device
+        self._depth = depth
+        self._fifo: deque = deque()
+        self._exhausted = False
+        self.transfers = 0  # number of device_puts issued (introspection)
+
+    def _fill(self) -> None:
+        while not self._exhausted and len(self._fifo) < self._depth:
+            try:
+                item = next(self._it)
+            except StopIteration:
+                self._exhausted = True
+                return
+            self._fifo.append(jax.device_put(item, self._device))
+            self.transfers += 1
+
+    def __iter__(self) -> Iterator[jax.Array]:
+        return self
+
+    def __next__(self) -> jax.Array:
+        self._fill()
+        if not self._fifo:
+            raise StopIteration
+        out = self._fifo.popleft()
+        self._fill()  # start the next transfer before the caller computes
+        return out
+
+    def sync(self) -> None:
+        """Explicit sync point: block until every in-flight blob has landed."""
+        for blob in self._fifo:
+            jax.block_until_ready(blob)
+
+
+class BatchedProcess:
+    """A process AOT-compiled once for a leading batch axis.
+
+    ``fn(blob, *aux) -> blob`` becomes ``vmap(fn)((k, nbytes) blobs, aux
+    broadcast)``; compilation goes through :func:`~repro.core.process.
+    aot_compile`, so repeated construction for the same process/batch size
+    hits the global compile cache (the paper's "init once" at batch scale).
+    """
+
+    def __init__(self, process, batch: int):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.process = process
+        self.batch = batch
+        self.launchable: Optional[PureLaunchable] = None
+        self._compiled = None
+
+    def init(self) -> "BatchedProcess":
+        p = self.process
+        app = p.getApp()
+        for name in p.kernel_names:
+            app.kernels.load(name)
+        la = p.launchable()
+        batched = jax.vmap(la.fn, in_axes=(0,) + (None,) * len(la.aux_handles))
+        specs = [batched_spec(la.in_layout, self.batch)] + p._aux_specs(la)
+        self._compiled = aot_compile(
+            batched, specs,
+            tag=f"{la.tag}@vmap",
+            donate_argnums=(0,) if la.in_place else (),
+            static_key=la.static_key,
+            mesh=app.mesh,
+        )
+        self.launchable = la
+        return self
+
+    def __call__(self, stacked_blob: jax.Array,
+                 aux_blobs: Sequence[jax.Array]) -> jax.Array:
+        """One launch for ``batch`` independent Data sets.  Asynchronous —
+        the caller decides when (whether) to block on the result."""
+        if self._compiled is None:
+            self.init()
+        return self._compiled(stacked_blob, *aux_blobs)
+
+
+def _host_blob_of(data: Data) -> np.ndarray:
+    """Authoritative host blob of one input Data (syncing device→host first
+    if only the device copy is fresh)."""
+    if data.layout is None:
+        data.plan()
+    if any(a.host is None for a in data):
+        data.sync_to_host()  # raises if there is no device copy either
+    return data.pack_host()
+
+
+def _batched_host_blobs(datasets: Sequence[Data], layout,
+                        batch: int) -> Iterator[np.ndarray]:
+    """Yield (batch, nbytes) stacked host blobs; the ragged tail is padded
+    by repeating the last item (padded outputs are dropped downstream)."""
+    group: List[np.ndarray] = []
+    for d in datasets:
+        if d.layout is None:
+            d.plan()
+        if d.layout != layout:
+            raise ValueError(
+                f"dataset layout {d.layout} does not match the wired input "
+                f"layout {layout}; all streamed Data sets must be homogeneous")
+        group.append(_host_blob_of(d))
+        if len(group) == batch:
+            yield stack_host_blobs(group, layout)
+            group = []
+    if group:
+        group += [group[-1]] * (batch - len(group))
+        yield stack_host_blobs(group, layout)
+
+
+def stream_launch(process, datasets: Sequence[Data], *, batch: int = 1,
+                  depth: int = 2, sync: bool = False,
+                  profile: ProfileParameters | None = None) -> List[Data]:
+    """Run ``datasets`` through ``process`` batched + double-buffered.
+
+    See :meth:`repro.core.process.Process.stream` for the public contract.
+    """
+    datasets = list(datasets)
+    if not datasets:
+        return []
+    app = process.getApp()
+    bp = BatchedProcess(process, batch).init()
+    la = bp.launchable
+
+    aux_blobs = []
+    for h in la.aux_handles:
+        d = app.getData(h)
+        if d.device_blob is None:
+            # dispatch-only upload: the aux transfer rides alongside the
+            # first input batch's transfer; the launch consuming the blob is
+            # the implicit sync point (CLapp tracks the handle in flight)
+            app.host2device(h, wait=False)
+        aux_blobs.append(d.device_blob)
+
+    queue = StreamQueue(_batched_host_blobs(datasets, la.in_layout, batch),
+                        device=app.device, depth=depth)
+    t0 = time.perf_counter()
+    out_batches: List[jax.Array] = []
+    for dev_batch in queue:           # batch i+1 transfers while i computes
+        out_batches.append(bp(dev_batch, aux_blobs))
+    # settle the aux uploads' coherence bookkeeping: by now every launch has
+    # consumed the aux blobs, so this only waits on the transfers themselves
+    app.wait_transfers(la.aux_handles)
+
+    results: List[Data] = []
+    for i in range(len(datasets)):
+        out = Data.from_layout(la.out_layout)
+        out.device_blob = out_batches[i // batch][i % batch]
+        out.coherence = Coherence.DEVICE_FRESH
+        results.append(out)
+    if sync:
+        for r in results:
+            r.sync_to_host()          # np.asarray blocks per result
+    if profile is not None and profile.enable:
+        jax.block_until_ready([r.device_blob for r in results])
+        profile.record(time.perf_counter() - t0)
+    return results

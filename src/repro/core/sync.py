@@ -21,12 +21,21 @@ class SyncSource(enum.Enum):
 
 
 class Coherence(enum.Enum):
-    """Freshness state of the (host, device) pair backing a Data object."""
+    """Freshness state of the (host, device) pair backing a Data object.
+
+    ``TRANSFERRING`` is the streaming-executor state: a host→device
+    ``device_put`` has been *dispatched* but not awaited (JAX transfers are
+    asynchronous; only a reader of the array blocks).  The owning CLapp
+    tracks which handles are in flight and settles them — to IN_SYNC or
+    DEVICE_FRESH — at an explicit sync point (``CLapp.wait_transfers``) or
+    implicitly on the next ``device2Host``.
+    """
 
     HOST_FRESH = "host"        # host copy newer (or device absent)
     DEVICE_FRESH = "device"    # device copy newer (or host absent)
     IN_SYNC = "sync"           # both copies identical
     EMPTY = "empty"            # no storage attached yet
+    TRANSFERRING = "h2d"       # host->device transfer dispatched, not awaited
 
 
 def resolve_source(sync: SyncSource, coherence: Coherence) -> str:
@@ -36,7 +45,10 @@ def resolve_source(sync: SyncSource, coherence: Coherence) -> str:
     if sync is SyncSource.HOST_ONLY:
         return "host"
     # AUTO
-    if coherence in (Coherence.DEVICE_FRESH, Coherence.IN_SYNC):
+    if coherence in (Coherence.DEVICE_FRESH, Coherence.IN_SYNC,
+                     Coherence.TRANSFERRING):
+        # an in-flight device copy is authoritative: reading it simply
+        # blocks until the dispatched transfer lands
         return "device"
     if coherence is Coherence.HOST_FRESH:
         return "host"

@@ -9,6 +9,11 @@ exact same sequence, which the fault-tolerance tests rely on.
 
 A file-backed corpus (tokenized ``.npz`` via ``repro.data.io``) plugs in
 through the same interface.
+
+:class:`ArenaFeed` bridges either loader to the streaming executor
+(:mod:`repro.core.stream`): each step's batch dict is packed into ONE arena
+host blob (the single-call transfer unit), so a ``StreamQueue`` can keep
+the next step's upload in flight while the current step computes.
 """
 from __future__ import annotations
 
@@ -66,6 +71,43 @@ class TokenStream:
         while True:
             yield self.batch_at(step)
             step += 1
+
+
+class ArenaFeed:
+    """Adapt a step-indexed loader (``TokenStream`` / ``FileCorpus`` — any
+    object with ``batch_at(step) -> {name: np.ndarray}``) to the streaming
+    executor.
+
+    Iterating yields one packed arena host blob per step — exactly what
+    :class:`repro.core.stream.StreamQueue` consumes — and ``self.layout``
+    is the shared :class:`~repro.core.arena.ArenaLayout` (all steps of a
+    loader are shape-homogeneous, so the layout is planned once from the
+    first batch).
+    """
+
+    def __init__(self, source, steps: int, start: int = 0):
+        from repro.core.arena import plan_layout
+
+        self.source = source
+        self.steps = int(steps)
+        self.start = int(start)
+        first = source.batch_at(self.start)
+        self.layout = plan_layout(
+            (name, np.asarray(a).shape, np.asarray(a).dtype)
+            for name, a in first.items())
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        from repro.core.arena import pack_host
+
+        for step in range(self.start, self.start + self.steps):
+            blob, _ = pack_host(self.source.batch_at(step), self.layout)
+            yield blob
+
+    def data_at(self, step: int):
+        """The same step as a registrable :class:`repro.core.data.Data`."""
+        from repro.core.data import Data
+
+        return Data(self.source.batch_at(step))
 
 
 class FileCorpus:

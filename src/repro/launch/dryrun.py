@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, SHAPES, cells, get_config
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import Roofline, collective_bytes, model_flops
+from repro.launch.roofline import (Roofline, collective_bytes, cost_dict,
+                                   model_flops)
 from repro.launch.specs import build_lowerable, named_shardings
 from repro.models.common import mesh_axes, resolve_tree
 
@@ -53,7 +54,7 @@ def _compile_cell(low, mesh):
 
 
 def _costs_of(compiled) -> Dict[str, Any]:
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)  # dict in old JAX, [dict, ...] in new JAX
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

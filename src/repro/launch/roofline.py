@@ -10,12 +10,41 @@ ICI.  ``cost_analysis()`` reports the SPMD-partitioned per-device module
 collective_bytes is parsed from the compiled HLO text: max(input, output)
 bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
 collective-permute (including their -start forms).
+
+Compat note: ``Compiled.cost_analysis()`` changed return type across JAX
+versions — old JAX returns one flat ``{metric: value}`` dict for the
+executable, newer JAX (>= 0.4.x line used here) returns a **list** of
+per-computation dicts.  All readers must go through :func:`cost_dict`,
+which normalizes both shapes to a single summed dict.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
 from typing import Any, Dict, List, Optional, Tuple
+
+
+def cost_dict(compiled) -> Dict[str, float]:
+    """Normalized ``cost_analysis()`` of a compiled executable.
+
+    Accepts either a ``jax.stages.Compiled`` (calls ``cost_analysis()`` on
+    it) or the raw return value.  Old JAX returns a dict; new JAX returns a
+    list of per-computation dicts — these are merged by summing numeric
+    metrics, which is correct for the additive metrics this repo reads
+    ("flops", "bytes accessed").  ``None``/empty analyses give ``{}``.
+    """
+    cost = compiled.cost_analysis() if hasattr(compiled, "cost_analysis") else compiled
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+    merged: Dict[str, float] = {}
+    for comp in cost:
+        for k, v in (comp or {}).items():
+            if isinstance(v, (int, float)):
+                merged[k] = merged.get(k, 0.0) + float(v)
+    return merged
 
 PEAK_FLOPS = 197e12        # bf16 / chip
 HBM_BW = 819e9             # bytes/s / chip

@@ -30,12 +30,7 @@ class SimpleMRIRecon(Process):
         if self.in_place:
             work = self.in_handle
         else:
-            from repro.core.data import Data, NDArray
-            src = app.getData(self.in_handle)
-            scratch = Data(None)
-            for a in src:
-                scratch.add(NDArray(shape=a.shape, dtype=a.dtype, name=a.name))
-            work = app.addData(scratch)
+            work = app.addData(app.getData(self.in_handle).spec_clone())
 
         p_ifft = FFT(app)
         p_ifft.set_in_handle(self.in_handle)
@@ -61,3 +56,10 @@ class SimpleMRIRecon(Process):
         if not self._initialized:
             self.init()
         self.chain.launch(profile)
+
+    def stream(self, datasets, batch: int = 1, **kw):
+        """Reconstruct a stack of independent KData sets via the streaming
+        executor (batched + double-buffered; see Process.stream)."""
+        if not self._initialized:
+            self.init()
+        return self.chain.stream(datasets, batch=batch, **kw)

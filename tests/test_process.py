@@ -124,6 +124,62 @@ def test_parameter_change_triggers_reinit(app, rng):
     np.testing.assert_allclose(r2, r1 * 2.0, rtol=1e-6)
 
 
+def test_fused_chain_cache_distinguishes_wiring(app, rng):
+    """Two chains with identical stages/params/layouts but different
+    inter-stage wiring must not share one compiled executable."""
+    base = rng.standard_normal((8, 8)).astype(np.float32)
+
+    def build(series_wiring):
+        d_in = XData({"img": base.copy()})
+        d_mid = XData(d_in, copy_values=False)
+        d_out = XData(d_in, copy_values=False)
+        h_in, h_mid, h_out = (app.addData(x) for x in (d_in, d_mid, d_out))
+        p1 = AddConst(app); p1.set_in_handle(h_in); p1.set_out_handle(h_mid)
+        p1.set_launch_parameters(1.0)
+        p2 = Scale(app)
+        p2.set_in_handle(h_mid if series_wiring else h_in)
+        p2.set_out_handle(h_out)
+        p2.set_launch_parameters(3.0)
+        chain = ProcessChain(app, [p1, p2], mode="fused")
+        chain.init()
+        chain.launch()
+        app.device2Host(h_out)
+        return d_out.get_ndarray(0).host.copy()
+
+    series = build(True)     # p2 reads p1's output: (x + 1) * 3
+    forked = build(False)    # p2 reads the chain input:  x * 3
+    np.testing.assert_allclose(series, (base + 1.0) * 3.0, rtol=1e-6)
+    np.testing.assert_allclose(forked, base * 3.0, rtol=1e-6)
+
+
+def test_aux_rewire_after_init_takes_effect(app, rng):
+    """Re-wiring an aux handle to a same-layout Data between launches is
+    honoured without re-init (aux handles are read live, not snapshotted)."""
+    class AddBias(Process):
+        def apply(self, views, aux, params):
+            return {k: v + aux["bias"]["img"] for k, v in views.items()}
+
+    b1 = rng.standard_normal((4, 4)).astype(np.float32)
+    b2 = rng.standard_normal((4, 4)).astype(np.float32)
+    d_in = _data(rng, (4, 4))
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    h_b1 = app.addData(XData({"img": b1}))
+    h_b2 = app.addData(XData({"img": b2}))
+    p = AddBias(app)
+    p.set_in_handle(h_in); p.set_out_handle(h_out)
+    p.set_aux_handle("bias", h_b1)
+    p.init(); p.launch()
+    app.device2Host(h_out)
+    np.testing.assert_allclose(d_out.get_ndarray(0).host,
+                               d_in.get_ndarray(0).host + b1, rtol=1e-6)
+    p.set_aux_handle("bias", h_b2)   # same layout, no re-init
+    p.launch()
+    app.device2Host(h_out)
+    np.testing.assert_allclose(d_out.get_ndarray(0).host,
+                               d_in.get_ndarray(0).host + b2, rtol=1e-6)
+
+
 def test_heterogeneous_data_single_transfer(app, rng):
     """Arbitrarily heterogeneous Data moves as ONE buffer (paper §III-A.2)."""
     d = Data({"vol": rng.standard_normal((2, 3, 4)).astype(np.float32),

@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.roofline import (Roofline, collective_bytes, count_params,
-                                   model_flops)
+from repro.launch.roofline import (Roofline, collective_bytes, cost_dict,
+                                   count_params, model_flops)
 from repro.launch.specs import default_microbatches, fit_pspec
 from repro.configs import SHAPES, get_config
 
@@ -35,14 +35,14 @@ def test_cost_analysis_is_per_device_and_body_once():
     """Documents the two facts the dry-run relies on."""
     a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
     c = jax.jit(lambda x: x @ x).lower(a).compile()
-    one = c.cost_analysis()["flops"]
+    one = cost_dict(c)["flops"]
     assert one == pytest.approx(2 * 512 ** 3, rel=0.01)
 
     def scanned(x):
         y, _ = jax.lax.scan(lambda c_, _: (c_ @ c_, ()), x, None, length=10)
         return y
 
-    cs = jax.jit(scanned).lower(a).compile().cost_analysis()["flops"]
+    cs = cost_dict(jax.jit(scanned).lower(a).compile())["flops"]
     assert cs == pytest.approx(one, rel=0.05), \
         "scan body must be counted ONCE (the reconstruction depends on this)"
 

@@ -1,0 +1,223 @@
+"""Streaming executor: double-buffer correctness (streamed == sequential
+launch(), bitwise), batch-axis compile-cache hits, donation across streamed
+in-place chains, in-flight transfer tracking, and the loader->queue feed."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (BatchedProcess, CLapp, Coherence, Data,
+                        DonatedBufferError, Process, ProcessChain,
+                        StreamQueue, XData, compile_cache_stats,
+                        unpack_device)
+from repro.data.pipeline import ArenaFeed, StreamConfig, TokenStream
+
+
+class AddConst(Process):
+    def apply(self, views, aux, params):
+        c = params if params is not None else 1.0
+        return {k: v + c for k, v in views.items()}
+
+
+class Scale(Process):
+    def apply(self, views, aux, params):
+        return {k: v * params for k, v in views.items()}
+
+
+class AddAux(Process):
+    def apply(self, views, aux, params):
+        return {k: v + aux["bias"]["img"] for k, v in views.items()}
+
+
+@pytest.fixture
+def app():
+    return CLapp().init()
+
+
+def _chain(app, h_in, h_mid, h_out, mode="staged"):
+    p1 = AddConst(app); p1.set_in_handle(h_in); p1.set_out_handle(h_mid)
+    p1.set_launch_parameters(1.5)
+    p2 = Scale(app); p2.set_in_handle(h_mid); p2.set_out_handle(h_out)
+    p2.set_launch_parameters(-2.0)
+    return ProcessChain(app, [p1, p2], mode=mode)
+
+
+def _mk_datasets(rng, n, shape=(8, 8)):
+    return [XData({"img": rng.standard_normal(shape).astype(np.float32)})
+            for _ in range(n)]
+
+
+def _sequential(app, chain, h_in, h_out, d_in, d_out, datasets):
+    """One-at-a-time launch() reference results (host copies)."""
+    out = []
+    for d in datasets:
+        d_in.get_ndarray(0).set_host(d.get_ndarray(0).host)
+        app.host2device(h_in)
+        chain.launch()
+        app.device2Host(h_out)
+        out.append(d_out.get_ndarray(0).host.copy())
+    return out
+
+
+@pytest.mark.parametrize("mode", ["staged", "fused"])
+@pytest.mark.parametrize("batch,n", [(1, 3), (4, 8), (4, 10)])  # incl. ragged
+def test_stream_matches_sequential_launch(app, rng, mode, batch, n):
+    datasets = _mk_datasets(rng, n)
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_mid = XData(d_in, copy_values=False)
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_mid, h_out = (app.addData(x) for x in (d_in, d_mid, d_out))
+    chain = _chain(app, h_in, h_mid, h_out, mode=mode)
+    chain.init()
+    want = _sequential(app, chain, h_in, h_out, d_in, d_out, datasets)
+    got = chain.stream(datasets, batch=batch, sync=True)
+    assert len(got) == n
+    for i in range(n):
+        np.testing.assert_array_equal(got[i].get_ndarray(0).host, want[i],
+                                      err_msg=f"dataset {i}")
+
+
+def test_stream_with_aux_broadcast(app, rng):
+    """Aux Data (bias) is broadcast across the batch axis, not batched."""
+    bias = rng.standard_normal((8, 8)).astype(np.float32)
+    d_bias = XData({"img": bias})
+    h_bias = app.addData(d_bias)
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = AddAux(app)
+    p.set_in_handle(h_in); p.set_out_handle(h_out)
+    p.set_aux_handle("bias", h_bias)
+    p.init()
+    datasets = _mk_datasets(rng, 5)
+    got = p.stream(datasets, batch=2, sync=True)
+    for d, o in zip(datasets, got):
+        np.testing.assert_array_equal(
+            o.get_ndarray(0).host, d.get_ndarray(0).host + bias)
+
+
+def test_stream_batch_axis_compile_cache_hits(app, rng):
+    """The batched program compiles once; re-streaming (and re-wrapping in
+    BatchedProcess) with the same batch size must hit the compile cache."""
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = Scale(app)
+    p.set_in_handle(h_in); p.set_out_handle(h_out)
+    p.set_launch_parameters(3.0)
+    datasets = _mk_datasets(rng, 4)
+    p.stream(datasets, batch=2)                   # compiles launch + batched
+    h0, m0 = compile_cache_stats()
+    p.stream(datasets, batch=2)                   # same batch -> cache hit
+    BatchedProcess(p, 2).init()                   # explicit wrap -> cache hit
+    h1, m1 = compile_cache_stats()
+    assert m1 - m0 == 0, "no new compilations for a repeated batch size"
+    assert h1 - h0 >= 2
+    h0, m0 = compile_cache_stats()
+    p.stream(datasets, batch=4)                   # new batch axis -> one miss
+    h1, m1 = compile_cache_stats()
+    assert m1 - m0 == 1
+
+
+def test_stream_donation_in_place_chain(app, rng):
+    """An in-place chain (last out == first in) donates the stacked input
+    blob; streamed results must still equal sequential in-place launches."""
+    d = XData({"img": np.zeros((8, 8), np.float32)})
+    h = app.addData(d)
+    p1 = AddConst(app); p1.set_in_handle(h); p1.set_out_handle(h)
+    p1.set_launch_parameters(2.0)
+    p2 = Scale(app); p2.set_in_handle(h); p2.set_out_handle(h)
+    p2.set_launch_parameters(0.5)
+    chain = ProcessChain(app, [p1, p2], mode="fused")
+    chain.init()
+    assert chain.launchable().in_place
+    datasets = _mk_datasets(rng, 6)
+    want = [(x.get_ndarray(0).host + 2.0) * 0.5 for x in datasets]
+    got = chain.stream(datasets, batch=3, sync=True)
+    for w, o in zip(want, got):
+        np.testing.assert_allclose(o.get_ndarray(0).host, w, rtol=1e-6)
+    # the input datasets' own host copies were never consumed by donation
+    for x in datasets:
+        assert x.get_ndarray(0).host is not None
+
+
+def test_use_after_donate_guard(app, rng):
+    """Re-wiring an in-place-compiled process to out != in without re-init
+    must raise instead of silently donating the live input blob."""
+    d = XData({"img": rng.standard_normal((4, 4)).astype(np.float32)})
+    h = app.addData(d)
+    p = AddConst(app)
+    p.set_in_handle(h); p.set_out_handle(h)
+    p.init()
+    p.launch()
+    d2 = XData(d, copy_values=False)
+    h2 = app.addData(d2)
+    p.set_out_handle(h2)           # re-wired, no init()
+    app.host2device(h)
+    with pytest.raises(DonatedBufferError):
+        p.launch()
+    p.init()                       # recompile for the new wiring
+    p.launch()                     # now fine
+    app.device2Host(h2)
+    assert d2.get_ndarray(0).host is not None
+
+
+def test_stream_queue_prefetch_depth():
+    blobs = [np.full((16,), i, np.uint8) for i in range(5)]
+    q = StreamQueue(iter(blobs), depth=2)
+    first = next(q)
+    # after consuming item 0, items 1 and 2 must already be dispatched
+    assert q.transfers == 3
+    np.testing.assert_array_equal(np.asarray(first), blobs[0])
+    rest = list(q)
+    assert len(rest) == 4
+    assert q.transfers == 5
+    q.sync()                      # no-op on a drained queue
+    with pytest.raises(ValueError):
+        StreamQueue([], depth=0)
+
+
+def test_host2device_in_flight_tracking(app, rng):
+    d = XData({"img": rng.standard_normal((4, 4)).astype(np.float32)})
+    h = app.addData(d, to_device=False)
+    app.host2device(h, wait=False)
+    assert d.coherence is Coherence.TRANSFERRING
+    assert app.in_flight_handles == [h]
+    app.wait_transfers()
+    assert d.coherence is Coherence.IN_SYNC
+    assert app.in_flight_handles == []
+    # device2Host settles a still-in-flight transfer implicitly
+    app.host2device(h, wait=False)
+    app.device2Host(h)
+    assert d.coherence is Coherence.IN_SYNC
+    assert app.in_flight_handles == []
+
+
+def test_data_from_layout_and_spec_clone(app, rng):
+    d = Data({"a": rng.standard_normal((3, 4)).astype(np.float32),
+              "b": rng.integers(0, 9, (5,)).astype(np.int32)})
+    d.plan()
+    spec = Data.from_layout(d.layout)
+    assert spec.names == d.names
+    assert all(a.host is None for a in spec)
+    assert spec.layout == d.layout
+    clone = d.spec_clone()
+    assert clone.names == d.names
+    assert [a.shape for a in clone] == [a.shape for a in d]
+
+
+def test_arena_feed_streams_loader_batches(app):
+    """TokenStream -> ArenaFeed -> StreamQueue: device blobs unpack to the
+    exact loader batches (the training-loader feed path)."""
+    cfg = StreamConfig(vocab=97, seq=16, batch=2, seed=3)
+    ts = TokenStream(cfg)
+    feed = ArenaFeed(ts, steps=4)
+    q = StreamQueue(feed, device=app.device, depth=2)
+    for step, dev_blob in enumerate(q):
+        views = unpack_device(dev_blob, feed.layout)
+        want = ts.batch_at(step)
+        for name in want:
+            np.testing.assert_array_equal(np.asarray(views[name]), want[name])
+    assert step == 3
+    # data_at mirrors the same batch as a registrable Data
+    d = feed.data_at(1)
+    assert set(d.names) == {"tokens", "labels"}
