@@ -1,0 +1,146 @@
+"""Mesh-sharded streaming scaling: throughput at 1/2/4/8 host devices.
+
+The host-platform device count is locked at the first jax initialisation,
+so each point runs in its own subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.  Every child
+reconstructs the same stack of synthetic multicoil K-space Data sets
+through ``SimpleMRIRecon`` with ``stream(..., sharded=True)`` — the call
+site is IDENTICAL at every device count; only ``CLapp.init()``'s device
+selection changes, which is the paper's housekeeping promise at mesh
+scale.
+
+Forced host devices split one physical CPU, so wall-clock speedup is NOT
+expected here — the benchmark demonstrates correct placement (every batch
+sharded over all N devices) and records per-count throughput for hosts
+where the devices are real.  Emits harness CSV rows, a ``BENCH {json}``
+line, and ``BENCH_mesh_scaling.json`` next to this file.
+
+    PYTHONPATH=src python -m benchmarks.mesh_scaling
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import List
+
+DEVICE_COUNTS = (1, 2, 4, 8)
+FRAMES, COILS, H, W = 2, 2, 32, 32
+N_DATASETS = 16
+BATCH = 8
+REPS = 5
+
+
+def _child(n_devices: int) -> dict:
+    """Run inside the forced-device subprocess: streamed sharded recon."""
+    import jax
+    import numpy as np
+
+    from repro.core import CLapp, KData, XData
+
+    from repro.processes import SimpleMRIRecon
+
+    app = CLapp().init()
+    assert len(app.devices) == n_devices, (
+        f"expected {n_devices} forced devices, got {len(app.devices)}")
+
+    rng = np.random.default_rng(0)
+    smaps = (rng.standard_normal((COILS, H, W))
+             + 1j * rng.standard_normal((COILS, H, W))).astype(np.complex64)
+    datasets = []
+    for i in range(N_DATASETS):
+        r = np.random.default_rng(100 + i)
+        k = (r.standard_normal((FRAMES, COILS, H, W))
+             + 1j * r.standard_normal((FRAMES, COILS, H, W))).astype(np.complex64)
+        datasets.append(KData({"kdata": k, "sensitivity_maps": smaps}))
+
+    d_in = KData({"kdata": datasets[0].kdata.host.copy(),
+                  "sensitivity_maps": smaps})
+    d_out = XData({"xdata": np.zeros(d_in.x_shape(), np.complex64)})
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    proc = SimpleMRIRecon(app, mode="staged", in_place=False)
+    proc.set_in_handle(h_in)
+    proc.set_out_handle(h_out)
+    proc.init()
+
+    def run():
+        outs = proc.stream(datasets, batch=BATCH, sharded=True)
+        jax.block_until_ready([o.device_blob for o in outs])
+        return outs
+
+    outs = run()                               # warmup (batched compile)
+    used = set()
+    for o in outs:
+        used |= set(o.device_blob.devices())
+    t = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        run()
+        t = min(t, time.perf_counter() - t0)
+    return {
+        "devices": n_devices,
+        "devices_used": len(used),
+        "streamed_s": round(t, 5),
+        "sets_per_s": round(N_DATASETS / t, 2),
+    }
+
+
+def rows() -> List[str]:
+    points = []
+    for n in DEVICE_COUNTS:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + f" --xla_force_host_platform_device_count={n}").strip()
+        src = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.mesh_scaling", "--child", str(n)],
+            env=env, capture_output=True, text=True, timeout=600,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        if r.returncode != 0:
+            raise RuntimeError(
+                f"mesh_scaling child (n={n}) failed:\n{r.stdout}\n{r.stderr}")
+        points.append(json.loads(r.stdout.strip().splitlines()[-1]))
+
+    base = points[0]["streamed_s"]
+    out_rows = []
+    for p in points:
+        p["speedup_vs_1dev"] = round(base / p["streamed_s"], 3)
+        out_rows.append(
+            f"mesh_stream_{p['devices']}dev,"
+            f"{p['streamed_s'] / N_DATASETS * 1e6:.1f},"
+            f"devices_used={p['devices_used']};"
+            f"sets_per_s={p['sets_per_s']};"
+            f"speedup_vs_1dev={p['speedup_vs_1dev']}")
+
+    bench = {
+        "name": "mesh_scaling",
+        "n_datasets": N_DATASETS, "batch": BATCH,
+        "shape": [FRAMES, COILS, H, W],
+        "points": points,
+        "all_devices_used": all(
+            p["devices_used"] == p["devices"] for p in points),
+    }
+    print("BENCH " + json.dumps(bench))
+    out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_mesh_scaling.json")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    return out_rows
+
+
+def main() -> None:
+    if "--child" in sys.argv:
+        n = int(sys.argv[sys.argv.index("--child") + 1])
+        print(json.dumps(_child(n)))
+        return
+    print("name,us_per_call,derived")
+    for r in rows():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm stream]
+    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm stream mesh]
 """
 from __future__ import annotations
 
@@ -11,7 +11,7 @@ import sys
 
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "fig2", "overhead", "roofline",
-                                  "lm", "stream"}
+                                  "lm", "stream", "mesh"}
     print("name,us_per_call,derived")
     rows = []
     if "table1" in which:
@@ -32,6 +32,9 @@ def main() -> None:
     if "stream" in which:
         from benchmarks.stream_throughput import rows as stream_rows
         rows += stream_rows()
+    if "mesh" in which:
+        from benchmarks.mesh_scaling import rows as mesh_rows
+        rows += mesh_rows()
     for r in rows:
         print(r)
 

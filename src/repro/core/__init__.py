@@ -17,11 +17,14 @@ from .arena import (
     ALIGN,
     ArenaEntry,
     ArenaLayout,
+    batched_spec,
     device_view,
     pack_device,
     pack_host,
     pack_tree_host,
     plan_layout,
+    split_batched_blob,
+    stack_host_blobs,
     unpack_device,
     unpack_host,
     unpack_tree_host,
@@ -47,7 +50,8 @@ __all__ = [
     "KernelCompileError", "KernelEntry", "KernelRegistry", "NDArray",
     "NoMatchingDeviceError", "PlatformTraits", "Process", "ProcessChain",
     "ProfileParameters", "PureLaunchable", "StreamQueue", "SyncSource",
-    "XData", "aot_compile", "compile_cache_stats", "device_view", "kernel",
-    "pack_device", "pack_host", "pack_tree_host", "plan_layout",
-    "stream_launch", "unpack_device", "unpack_host", "unpack_tree_host",
+    "XData", "aot_compile", "batched_spec", "compile_cache_stats",
+    "device_view", "kernel", "pack_device", "pack_host", "pack_tree_host",
+    "plan_layout", "split_batched_blob", "stack_host_blobs", "stream_launch",
+    "unpack_device", "unpack_host", "unpack_tree_host",
 ]

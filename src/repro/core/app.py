@@ -67,6 +67,7 @@ class CLapp:
     def __init__(self):
         self._devices: List[jax.Device] = []
         self._mesh: Optional[jax.sharding.Mesh] = None
+        self._mesh_explicit = False  # set_mesh() called; init() must not rebuild
         self._data: Dict[DataHandle, Data] = {}
         self._next_handle: DataHandle = 0
         self.kernels = KernelRegistry()
@@ -108,6 +109,15 @@ class CLapp:
 
         self._devices = devices
         self._initialized = True
+        if not self._mesh_explicit:
+            # housekeeping promise of the paper: selecting N devices is ALL
+            # the caller does; transfers and launches become device-count-
+            # agnostic through the (data, model) mesh built here.  Rebuilt on
+            # every init() so re-selecting devices never leaves a stale mesh
+            # spanning deselected ones; a mesh provided via set_mesh() is
+            # respected and never overwritten.
+            from repro.launch.mesh import make_data_mesh  # lazy: keep core light
+            self._mesh = make_data_mesh(devices)
         return self
 
     @property
@@ -123,10 +133,37 @@ class CLapp:
     # ------------------------------------------------------------------ mesh
     def set_mesh(self, mesh: jax.sharding.Mesh) -> None:
         self._mesh = mesh
+        self._mesh_explicit = mesh is not None  # set_mesh(None) re-enables auto
 
     @property
     def mesh(self) -> Optional[jax.sharding.Mesh]:
         return self._mesh
+
+    def data_sharding(self, layout: Optional[Sequence[Optional[str]]] = None,
+                      ) -> jax.sharding.NamedSharding:
+        """A :class:`~jax.sharding.NamedSharding` over the app mesh.
+
+        ``layout`` is the partition spec, one mesh-axis name (or ``None``)
+        per array dimension: ``("data",)`` shards a stacked ``(batch,
+        nbytes)`` arena blob row-wise across the selected devices (the
+        streaming executor's batch placement); the default ``None`` (or
+        ``()``) replicates — the placement for aux/broadcast blobs.
+        """
+        if self._mesh is None:
+            raise RuntimeError("CLapp has no mesh (init() not called?)")
+        spec = jax.sharding.PartitionSpec(*(layout or ()))
+        return jax.sharding.NamedSharding(self._mesh, spec)
+
+    @property
+    def default_sharding(self) -> jax.sharding.Sharding:
+        """Placement of single (unbatched) Data blobs: replicated over a
+        trivial mesh holding only the primary device.  Equivalent to the old
+        ``device_put(blob, self.device)`` — single-device behaviour is
+        byte-identical — but expressed as a NamedSharding so every transfer
+        goes through one placement path."""
+        mesh = jax.sharding.Mesh(
+            np.array([[self.device]], dtype=object), ("data", "model"))
+        return jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
 
     # ----------------------------------------------------------------- kernels
     def loadKernels(self, modules: str | Sequence[str]) -> List[str]:
@@ -159,7 +196,8 @@ class CLapp:
         if data is not None:
             data.device_blob = None  # drop device reference
 
-    def host2device(self, handle: DataHandle, *, wait: bool = True) -> None:
+    def host2device(self, handle: DataHandle, *, wait: bool = True,
+                    sharding: Optional[jax.sharding.Sharding] = None) -> None:
         """Pack + transfer a Data set in one call (the paper's single-call
         transfer).  ``jax.device_put`` is asynchronous either way; with the
         default ``wait=True`` the Data's coherence is stamped with its final
@@ -167,7 +205,12 @@ class CLapp:
         behaviour).  ``wait=False`` is the streaming path: the handle is
         marked ``Coherence.TRANSFERRING`` and tracked in flight, so a later
         ``wait_transfers()`` is the ONLY blocking sync point — this lets
-        batch *i+1*'s upload overlap batch *i*'s compute."""
+        batch *i+1*'s upload overlap batch *i*'s compute.
+
+        ``sharding`` overrides the placement (e.g. ``app.data_sharding()``
+        to replicate an aux blob over every selected device for sharded
+        streaming); the default is :attr:`default_sharding` — the primary
+        device, matching pre-mesh behaviour exactly."""
         data = self.getData(handle)
         if data.layout is None:
             data.plan()
@@ -177,7 +220,8 @@ class CLapp:
         else:
             blob = np.zeros(data.layout.total_bytes, dtype=np.uint8)
             coherence = Coherence.DEVICE_FRESH
-        data.device_blob = jax.device_put(blob, self.device)
+        data.device_blob = jax.device_put(
+            blob, sharding if sharding is not None else self.default_sharding)
         if wait:
             self._in_flight.pop(handle, None)
             data.coherence = coherence

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict, Iterable, List, Mapping, Sequence, Tuple
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -216,6 +216,32 @@ def batched_spec(layout: ArenaLayout, batch: int) -> jax.ShapeDtypeStruct:
     uint8.  The per-item layout is unchanged — a vmapped program sees each
     row as one ordinary 1-D arena blob."""
     return jax.ShapeDtypeStruct((int(batch), layout.total_bytes), np.uint8)
+
+
+def split_batched_blob(stacked: jax.Array) -> List[jax.Array]:
+    """Per-item 1-D arena blobs out of a ``(k, total_bytes)`` stacked blob.
+
+    For a batch-sharded stacked blob (``NamedSharding`` with the leading
+    axis on the mesh's ``data`` axis) rows are sliced out of the LOCAL
+    ``addressable_shards``, so each item's output blob stays resident on
+    the device that computed it — no cross-device gather, no implicit
+    transfer back to device 0.  A single-device (or replicated) stacked
+    blob is one shard covering every row, which reduces to plain row
+    indexing.
+    """
+    k = int(stacked.shape[0])
+    items: List[Optional[jax.Array]] = [None] * k
+    for shard in stacked.addressable_shards:
+        row0 = shard.index[0].start or 0
+        for r in range(shard.data.shape[0]):
+            if items[row0 + r] is None:     # replicated: first copy wins
+                items[row0 + r] = shard.data[r]
+    missing = [i for i, b in enumerate(items) if b is None]
+    if missing:
+        raise ValueError(
+            f"stacked blob rows {missing} have no addressable shard "
+            "(multi-process sharding is not supported by split_batched_blob)")
+    return items
 
 
 def stack_host_blobs(blobs: Sequence[np.ndarray], layout: ArenaLayout) -> np.ndarray:

@@ -105,9 +105,14 @@ class Data:
         # device side (owned by CLIPERApp.addData)
         self.layout: Optional[ArenaLayout] = None
         self.device_blob: Optional[jax.Array] = None
+        # spec-only sets (no arrays, or any array without host values) start
+        # EMPTY: there is nothing authoritative to read yet.  Stamping them
+        # HOST_FRESH would make authoritative()/save() trust absent host
+        # arrays.  HOST_FRESH requires every array to be host-backed.
         self.coherence: Coherence = (
-            Coherence.HOST_FRESH if self._arrays and all(a.host is not None for a in self._arrays)
-            else Coherence.EMPTY if not self._arrays else Coherence.HOST_FRESH
+            Coherence.HOST_FRESH
+            if self._arrays and all(a.host is not None for a in self._arrays)
+            else Coherence.EMPTY
         )
 
     # -- container protocol ---------------------------------------------------
@@ -115,6 +120,14 @@ class Data:
         if array.name is None:
             array.name = f"nd{len(self._arrays)}"
         self._arrays.append(array)
+        # an EMPTY set becomes HOST_FRESH once every array is host-backed;
+        # adding a spec-only array to a HOST_FRESH set demotes it to EMPTY
+        if self.device_blob is None:
+            self.coherence = (
+                Coherence.HOST_FRESH
+                if all(a.host is not None for a in self._arrays)
+                else Coherence.EMPTY
+            )
 
     def get_ndarray(self, i: int) -> NDArray:
         return self._arrays[i]
@@ -257,10 +270,20 @@ class KData(Data):
         if isinstance(src, str):
             from repro.data import io as repro_io
             names = list(variables or [self.KDATA, self.SMAPS])
+            if len(names) != 2:
+                raise ValueError(
+                    f"KData needs exactly (kdata, smaps) variables, got {names}")
             loaded = repro_io.load_any(src, names)
-            # normalise external variable names to canonical ones
-            vals = list(loaded.values())
-            super().__init__({self.KDATA: vals[0], self.SMAPS: vals[1]})
+            # normalise external variable names to canonical ones — indexed
+            # by the REQUESTED names, never by the loader's dict order (a
+            # reader is free to return variables in file order, which would
+            # silently swap kdata and the sensitivity maps)
+            missing = [n for n in names if n not in loaded]
+            if missing:
+                raise KeyError(f"variables {missing} not found in {src!r} "
+                               f"(loaded: {sorted(loaded)})")
+            super().__init__({self.KDATA: loaded[names[0]],
+                              self.SMAPS: loaded[names[1]]})
         elif isinstance(src, Mapping):
             super().__init__({self.KDATA: src[self.KDATA], self.SMAPS: src[self.SMAPS]})
         else:

@@ -76,21 +76,47 @@ def compile_cache_stats() -> Tuple[int, int]:
     return hits, misses
 
 
-def _cache_key(tag: str, specs, donate: bool, static_key: Any, mesh) -> Any:
+def _sharding_key(sharding) -> Any:
+    """Hashable fingerprint of one sharding annotation (or None)."""
+    if sharding is None:
+        return None
+    if isinstance(sharding, jax.sharding.NamedSharding):
+        return (_mesh_key(sharding.mesh), str(sharding.spec))
+    return repr(sharding)
+
+
+def _mesh_key(mesh) -> Any:
+    """Full mesh fingerprint: axis names/sizes AND every device id, in mesh
+    order.  Two meshes over different device sets — or the same set reordered
+    — must NOT share a cached executable (it would be pinned to the wrong
+    devices), so fingerprinting only the first device is not enough."""
+    if mesh is None:
+        return None
+    return (
+        tuple(mesh.axis_names),
+        tuple(mesh.devices.shape),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
+
+
+def _cache_key(tag: str, specs, donate: bool, static_key: Any, mesh,
+               in_shardings=None, out_shardings=None) -> Any:
     spec_key = tuple(
         (s.shape, str(s.dtype)) for s in jax.tree_util.tree_leaves(specs)
     )
-    mesh_key = None
-    if mesh is not None:
-        mesh_key = (tuple(mesh.shape.items()), tuple(str(d.id) for d in mesh.devices.flat[:1]))
-    return (tag, spec_key, donate, static_key, mesh_key)
+    shard_key = (
+        tuple(_sharding_key(s) for s in jax.tree_util.tree_leaves(in_shardings)),
+        tuple(_sharding_key(s) for s in jax.tree_util.tree_leaves(out_shardings)),
+    )
+    return (tag, spec_key, donate, static_key, _mesh_key(mesh), shard_key)
 
 
 def aot_compile(fn: Callable, specs: Sequence[Any], *, tag: str,
                 donate_argnums: Tuple[int, ...] = (), static_key: Any = None,
                 mesh=None, in_shardings=None, out_shardings=None):
     """AOT-compile ``fn`` for ``specs``; cached (the paper's "init once")."""
-    key = _cache_key(tag, specs, bool(donate_argnums), static_key, mesh)
+    key = _cache_key(tag, specs, bool(donate_argnums), static_key, mesh,
+                     in_shardings, out_shardings)
     cached = _COMPILE_CACHE.get(key)
     if cached is not None:
         _COMPILE_CACHE["__hits__"] = _COMPILE_CACHE.get("__hits__", 0) + 1
@@ -323,7 +349,7 @@ class Process:
 
     # -- streaming (beyond paper; see repro.core.stream) -----------------------
     def stream(self, datasets: Sequence[Any], batch: int = 1, *,
-               depth: int = 2, sync: bool = False,
+               depth: int = 2, sync: bool = False, sharded: bool = False,
                profile: ProfileParameters | None = None) -> List[Any]:
         """Run many independent input Data sets through this process.
 
@@ -334,11 +360,17 @@ class Process:
         compile cache and the donation rules of this process.  Returns one
         output Data per input, device-fresh (``sync=True`` also copies each
         result back to its host arrays).
+
+        ``sharded=True`` additionally splits every stacked batch across the
+        ``data`` axis of the app mesh — one launch computes ``batch`` items
+        spread over ALL selected devices, aux blobs replicated; results are
+        bit-identical and each item's output stays on the device that
+        computed it.  Requires ``batch`` divisible by the device count.
         """
         from .stream import stream_launch  # local import: avoid cycle
 
         return stream_launch(self, datasets, batch=batch, depth=depth,
-                             sync=sync, profile=profile)
+                             sync=sync, sharded=sharded, profile=profile)
 
 
 class ProcessChain(Process):

@@ -31,17 +31,46 @@ inference requests):
 Results are bit-identical to sequential ``launch()`` — the vmapped program
 runs the same per-item computation, only batched (verified in
 tests/test_stream.py and benchmarks/stream_throughput.py).
+
+Sharded streaming contract (``Process.stream(..., sharded=True)``)
+------------------------------------------------------------------
+
+With ``sharded=True`` the executor is *mesh-aware*: it uses the
+``("data", "model")`` mesh the owning :class:`~repro.core.app.CLapp`
+built over its selected devices (paper §III-A.1a: device selection is the
+ONLY device-count-dependent call the user makes).  The contract:
+
+* **Placement** — each stacked ``(batch, total_bytes)`` arena blob is
+  ``device_put`` with ``NamedSharding(mesh, P("data"))``: rows (items)
+  are scattered round-robin across every device on the ``data`` axis in
+  ONE call.  Aux blobs are replicated (``P()``) over the same mesh.
+* **Compilation** — the vmapped program is AOT-compiled once with
+  ``in_shardings``/``out_shardings`` matching that placement, so ONE
+  launch computes ``batch`` items split over all devices.  The compile
+  cache keys on the full mesh fingerprint (every device id + axis names)
+  and the shardings, so sharded/unsharded variants and different device
+  sets never collide on one executable.
+* **Constraints** — ``batch`` must be divisible by the ``data``-axis size
+  (the ragged tail is already padded up to ``batch`` by repetition, so
+  every dispatched batch is full).
+* **Results** — per-item outputs are sliced out of the sharded result's
+  ``addressable_shards``: each item's blob stays resident on the device
+  that computed it (no gather, no bounce through device 0).  Outputs are
+  bit-identical to sequential ``launch()`` — items never interact.
+* **Fallback** — ``sharded=False`` (default) and single-device apps keep
+  the exact pre-mesh behaviour: everything on ``app.device``.
 """
 from __future__ import annotations
 
 import time
+import weakref
 from collections import deque
 from typing import Any, Iterable, Iterator, List, Optional, Sequence
 
 import jax
 import numpy as np
 
-from .arena import batched_spec, stack_host_blobs
+from .arena import batched_spec, split_batched_blob, stack_host_blobs
 from .data import Data
 from .process import PureLaunchable, ProfileParameters, aot_compile
 from .sync import Coherence
@@ -55,6 +84,11 @@ class StreamQueue:
     blocks a *reader* of the array); consuming item *i* immediately starts
     the transfer of item *i+depth*.  ``depth=2`` is classic double
     buffering; larger depths trade memory for more dispatch-ahead slack.
+
+    ``device`` may be a :class:`jax.Device` OR a :class:`jax.sharding.
+    Sharding` — the sharded streaming path passes ``NamedSharding(mesh,
+    P("data"))`` so every dispatched stacked batch is scattered across the
+    mesh's ``data`` axis in the same single ``device_put`` call.
     """
 
     def __init__(self, items: Iterable[np.ndarray], device=None, depth: int = 2):
@@ -66,15 +100,30 @@ class StreamQueue:
         self._fifo: deque = deque()
         self._exhausted = False
         self.transfers = 0  # number of device_puts issued (introspection)
+        # every issued-but-not-yet-synced transfer, INCLUDING blobs already
+        # popped by the consumer (sync() must block on those too — popping
+        # hands over the array, it does not mean the transfer landed).
+        # Weakrefs: a blob the consumer dropped (or donated to a launch) has
+        # no buffer left to wait on and must not be kept alive by the queue.
+        self._issued: List[weakref.ref] = []
 
     def _fill(self) -> None:
+        # retire refs whose arrays are gone (dropped by the consumer or
+        # donated to a launch) so _issued stays bounded by the number of
+        # LIVE blobs, not the stream length
+        self._issued = [
+            ref for ref in self._issued
+            if (b := ref()) is not None and not _is_deleted(b)
+        ]
         while not self._exhausted and len(self._fifo) < self._depth:
             try:
                 item = next(self._it)
             except StopIteration:
                 self._exhausted = True
                 return
-            self._fifo.append(jax.device_put(item, self._device))
+            blob = jax.device_put(item, self._device)
+            self._fifo.append(blob)
+            self._issued.append(weakref.ref(blob))
             self.transfers += 1
 
     def __iter__(self) -> Iterator[jax.Array]:
@@ -88,10 +137,33 @@ class StreamQueue:
         self._fill()  # start the next transfer before the caller computes
         return out
 
+    @property
+    def in_flight(self) -> int:
+        """Issued transfers not yet retired by ``sync()`` whose arrays are
+        still live (queued OR already handed to the consumer)."""
+        return sum(
+            1 for ref in self._issued
+            if (b := ref()) is not None and not _is_deleted(b)
+        )
+
     def sync(self) -> None:
-        """Explicit sync point: block until every in-flight blob has landed."""
-        for blob in self._fifo:
-            jax.block_until_ready(blob)
+        """Explicit sync point: block until every in-flight blob has landed
+        — both blobs still queued in the FIFO and blobs already popped by
+        the consumer.  Donated/garbage-collected blobs are skipped (their
+        buffers are gone; there is nothing left to land)."""
+        for ref in self._issued:
+            blob = ref()
+            if blob is not None and not _is_deleted(blob):
+                jax.block_until_ready(blob)
+        self._issued.clear()
+
+
+def _is_deleted(blob: jax.Array) -> bool:
+    """True if the array's buffer is gone (donated to a launch / deleted)."""
+    try:
+        return bool(blob.is_deleted())
+    except AttributeError:  # non-jax arrays in tests
+        return False
 
 
 class BatchedProcess:
@@ -101,13 +173,23 @@ class BatchedProcess:
     broadcast)``; compilation goes through :func:`~repro.core.process.
     aot_compile`, so repeated construction for the same process/batch size
     hits the global compile cache (the paper's "init once" at batch scale).
+
+    ``sharded=True`` compiles the batched program with ``in_shardings`` /
+    ``out_shardings`` that split the stacked blob's leading axis over the
+    app mesh's ``data`` axis (aux blobs replicated): one launch runs
+    ``batch`` items spread across every selected device.  The batch size
+    must be divisible by the ``data``-axis size.
     """
 
-    def __init__(self, process, batch: int):
+    def __init__(self, process, batch: int, *, sharded: bool = False):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         self.process = process
         self.batch = batch
+        self.sharded = sharded
+        #: placement of stacked input batches (None = primary device); set
+        #: by init() and reused by stream_launch as the StreamQueue target
+        self.batch_sharding: Optional[jax.sharding.Sharding] = None
         self.launchable: Optional[PureLaunchable] = None
         self._compiled = None
 
@@ -119,12 +201,32 @@ class BatchedProcess:
         la = p.launchable()
         batched = jax.vmap(la.fn, in_axes=(0,) + (None,) * len(la.aux_handles))
         specs = [batched_spec(la.in_layout, self.batch)] + p._aux_specs(la)
+        in_shardings = out_shardings = None
+        if self.sharded:
+            mesh = app.mesh
+            if mesh is None:
+                raise RuntimeError(
+                    "sharded streaming needs the app mesh (CLapp.init builds "
+                    "one over the selected devices)")
+            n_data = int(mesh.shape.get("data", 1))
+            if self.batch % n_data != 0:
+                raise ValueError(
+                    f"batch={self.batch} not divisible by the mesh data-axis "
+                    f"size {n_data}; pick batch as a multiple of the device "
+                    "count so every device gets whole items")
+            self.batch_sharding = app.data_sharding(("data",))
+            replicated = app.data_sharding()
+            in_shardings = (self.batch_sharding,) + \
+                (replicated,) * len(la.aux_handles)
+            out_shardings = self.batch_sharding
         self._compiled = aot_compile(
             batched, specs,
             tag=f"{la.tag}@vmap",
             donate_argnums=(0,) if la.in_place else (),
             static_key=la.static_key,
             mesh=app.mesh,
+            in_shardings=in_shardings,
+            out_shardings=out_shardings,
         )
         self.launchable = la
         return self
@@ -170,19 +272,21 @@ def _batched_host_blobs(datasets: Sequence[Data], layout,
 
 
 def stream_launch(process, datasets: Sequence[Data], *, batch: int = 1,
-                  depth: int = 2, sync: bool = False,
+                  depth: int = 2, sync: bool = False, sharded: bool = False,
                   profile: ProfileParameters | None = None) -> List[Data]:
     """Run ``datasets`` through ``process`` batched + double-buffered.
 
-    See :meth:`repro.core.process.Process.stream` for the public contract.
+    See :meth:`repro.core.process.Process.stream` for the public contract
+    and the module docstring for the ``sharded=True`` placement contract.
     """
     datasets = list(datasets)
     if not datasets:
         return []
     app = process.getApp()
-    bp = BatchedProcess(process, batch).init()
+    bp = BatchedProcess(process, batch, sharded=sharded).init()
     la = bp.launchable
 
+    replicated = app.data_sharding() if sharded else None
     aux_blobs = []
     for h in la.aux_handles:
         d = app.getData(h)
@@ -191,10 +295,18 @@ def stream_launch(process, datasets: Sequence[Data], *, batch: int = 1,
             # first input batch's transfer; the launch consuming the blob is
             # the implicit sync point (CLapp tracks the handle in flight)
             app.host2device(h, wait=False)
-        aux_blobs.append(d.device_blob)
+        blob = d.device_blob
+        if replicated is not None and not blob.sharding.is_equivalent_to(
+                replicated, blob.ndim):
+            # the sharded program broadcasts aux across the whole mesh.  The
+            # replicated copy is CALL-LOCAL: the Data keeps its stored blob
+            # at the default placement, so later unsharded launch()/stream()
+            # calls (compiled for single-device inputs) still match.
+            blob = jax.device_put(blob, replicated)
+        aux_blobs.append(blob)
 
     queue = StreamQueue(_batched_host_blobs(datasets, la.in_layout, batch),
-                        device=app.device, depth=depth)
+                        device=bp.batch_sharding or app.device, depth=depth)
     t0 = time.perf_counter()
     out_batches: List[jax.Array] = []
     for dev_batch in queue:           # batch i+1 transfers while i computes
@@ -203,10 +315,16 @@ def stream_launch(process, datasets: Sequence[Data], *, batch: int = 1,
     # consumed the aux blobs, so this only waits on the transfers themselves
     app.wait_transfers(la.aux_handles)
 
+    # per-item output blobs: rows sliced shard-locally, so with sharded=True
+    # each item's result stays on the device that computed it
+    per_item: List[jax.Array] = []
+    for b in out_batches:
+        per_item.extend(split_batched_blob(b))
+
     results: List[Data] = []
     for i in range(len(datasets)):
         out = Data.from_layout(la.out_layout)
-        out.device_blob = out_batches[i // batch][i % batch]
+        out.device_blob = per_item[i]
         out.coherence = Coherence.DEVICE_FRESH
         results.append(out)
     if sync:

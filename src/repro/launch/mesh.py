@@ -6,7 +6,10 @@ the dry-run must set XLA_FLAGS before that happens.
 """
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -16,8 +19,21 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def make_data_mesh(devices: Sequence[jax.Device],
+                   axis_names: Tuple[str, str] = ("data", "model"),
+                   ) -> jax.sharding.Mesh:
+    """An explicit-device ``(data, model)`` mesh: every given device on the
+    ``data`` axis, ``model`` trivial.  This is the mesh :class:`repro.core.
+    app.CLapp` builds over its *selected* devices (which may be a subset or
+    reordering of ``jax.devices()``, so ``jax.make_mesh`` — which always
+    takes the first N global devices — is not usable here)."""
+    if not devices:
+        raise ValueError("cannot build a mesh over zero devices")
+    grid = np.array(devices, dtype=object).reshape(len(devices), 1)
+    return jax.sharding.Mesh(grid, axis_names)
+
+
 def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever devices exist locally, as a (data, model) mesh — used by the
     examples and tests on the single CPU device."""
-    n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    return make_data_mesh(jax.devices())

@@ -57,9 +57,13 @@ class SimpleMRIRecon(Process):
             self.init()
         self.chain.launch(profile)
 
-    def stream(self, datasets, batch: int = 1, **kw):
+    def stream(self, datasets, batch: int = 1, *, sharded: bool = False, **kw):
         """Reconstruct a stack of independent KData sets via the streaming
-        executor (batched + double-buffered; see Process.stream)."""
+        executor (batched + double-buffered; see Process.stream).
+
+        ``sharded=True`` splits each batch of slices across every device the
+        app selected (the mesh's ``data`` axis) — the call site is identical
+        whether the app selected one device or eight."""
         if not self._initialized:
             self.init()
-        return self.chain.stream(datasets, batch=batch, **kw)
+        return self.chain.stream(datasets, batch=batch, sharded=sharded, **kw)
