@@ -51,7 +51,7 @@ def _time_process(app, proc, h_in, reps=REPS) -> float:
         if proc.out_handle == proc.in_handle:
             app.host2device(h_in)   # re-stream (in-place donation consumed it)
         proc.launch(prof)
-    return prof.mean
+    return prof.mean()
 
 
 def table1() -> List[str]:
@@ -143,8 +143,8 @@ def process_overhead() -> List[str]:
     for _ in range(100):
         neg.launch(prof)
     rows.append(f"negate_init,{t_init * 1e6:.1f},compile")
-    rows.append(f"negate_launch,{prof.mean * 1e6:.1f},"
-                f"init_over_launch={t_init / max(prof.mean, 1e-12):.0f}x")
+    rows.append(f"negate_launch,{prof.mean() * 1e6:.1f},"
+                f"init_over_launch={t_init / max(prof.mean(), 1e-12):.0f}x")
     for mode in ("staged", "fused"):
         d_in = KData({"kdata": k.copy(), "sensitivity_maps": s})
         d_out = XData({"xdata": np.zeros((FRAMES, H, W), np.complex64)})
@@ -163,6 +163,6 @@ def process_overhead() -> List[str]:
         for _ in range(REPS):
             proc.launch(prof)
         rows.append(f"recon_{mode}_init,{t_init * 1e6:.1f},compile")
-        rows.append(f"recon_{mode}_launch,{prof.mean * 1e6:.1f},"
-                    f"init_over_launch={t_init / max(prof.mean, 1e-12):.0f}x")
+        rows.append(f"recon_{mode}_launch,{prof.mean() * 1e6:.1f},"
+                    f"init_over_launch={t_init / max(prof.mean(), 1e-12):.0f}x")
     return rows

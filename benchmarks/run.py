@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm stream mesh]
+    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm stream mesh serve]
 """
 from __future__ import annotations
 
@@ -11,7 +11,7 @@ import sys
 
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "fig2", "overhead", "roofline",
-                                  "lm", "stream", "mesh"}
+                                  "lm", "stream", "mesh", "serve"}
     print("name,us_per_call,derived")
     rows = []
     if "table1" in which:
@@ -35,6 +35,9 @@ def main() -> None:
     if "mesh" in which:
         from benchmarks.mesh_scaling import rows as mesh_rows
         rows += mesh_rows()
+    if "serve" in which:
+        from benchmarks.serve_latency import rows as serve_rows
+        rows += serve_rows()
     for r in rows:
         print(r)
 

@@ -1,0 +1,108 @@
+"""Serving-loop latency/throughput: the Pipeline's request/response mode.
+
+Submits N independent multicoil K-space requests to a
+:class:`repro.serve.pipeline.PipelineServer` over the SimpleMRIRecon
+operator graph and drains them at max-batch 1 / 4 / 8:
+
+* **p50 / p99 latency** — wall clock from ``submit()`` to result-ready,
+  as recorded on each :class:`ServeResponse` (this includes queueing
+  delay, so larger batches trade tail latency for throughput — exactly
+  the dynamic-batching curve a serving deployment tunes).
+* **throughput** — requests per second over the whole drain.
+
+Prints the harness CSV rows plus one ``BENCH {json}`` line, and writes
+``BENCH_serve_latency.json`` next to this file for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import CLapp, KData, Pipeline
+from repro.processes import FFT, ComplexElementProd, XImageSum
+from repro.processes.coil_combine import CombineParams
+from repro.processes.complex_elementprod import ComplexElementProdParams
+from repro.processes.fft import FFTParams
+
+FRAMES, COILS, H, W = 4, 4, 64, 64
+N_REQUESTS = 24
+BATCHES = (1, 4, 8)
+REPS = 3   # drains per batch size; stats over the best drain (min p50)
+
+
+def _requests(n: int) -> List[KData]:
+    rng = np.random.default_rng(0)
+    smaps = (rng.standard_normal((COILS, H, W))
+             + 1j * rng.standard_normal((COILS, H, W))).astype(np.complex64)
+    out = []
+    for i in range(n):
+        r = np.random.default_rng(200 + i)
+        k = (r.standard_normal((FRAMES, COILS, H, W))
+             + 1j * r.standard_normal((FRAMES, COILS, H, W))).astype(np.complex64)
+        out.append(KData({"kdata": k, "sensitivity_maps": smaps}))
+    return out
+
+
+def _pipeline(app: CLapp) -> Pipeline:
+    return (Pipeline(app)
+            | FFT(app).bind(params=FFTParams("backward", var="kdata"))
+            | ComplexElementProd(app).bind(
+                params=ComplexElementProdParams(conjugate=True))
+            | XImageSum(app).bind(params=CombineParams()))
+
+
+def rows() -> List[str]:
+    app = CLapp().init()
+    requests = _requests(N_REQUESTS)
+    pipe = _pipeline(app)
+    pipe.build(requests[0])                  # AOT compile outside the timing
+
+    out_rows: List[str] = []
+    results = []
+    for batch in BATCHES:
+        server = pipe.serve(batch=batch)
+        server.submit(requests[0])
+        server.drain()                       # warm up the batched compiles
+        best = None
+        for _ in range(REPS):
+            rids = [server.submit(r) for r in requests]
+            t0 = time.perf_counter()
+            responses = server.drain()
+            total_s = time.perf_counter() - t0
+            assert len(responses) == len(rids)
+            lat = np.asarray(sorted(r.latency_s for r in responses))
+            stats = {
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "throughput_rps": len(responses) / max(total_s, 1e-12),
+            }
+            if best is None or stats["p50_ms"] < best["p50_ms"]:
+                best = stats
+        results.append({"batch": batch, **{k: round(v, 3)
+                                           for k, v in best.items()}})
+        out_rows.append(
+            f"serve_latency_b{batch},{best['p50_ms'] * 1e3:.1f},"
+            f"p99_ms={best['p99_ms']:.2f};"
+            f"throughput_rps={best['throughput_rps']:.1f}")
+    bench = {
+        "name": "serve_latency",
+        "n_requests": N_REQUESTS,
+        "shape": [FRAMES, COILS, H, W],
+        "results": results,
+    }
+    print("BENCH " + json.dumps(bench))
+    out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_serve_latency.json")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    return out_rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in rows():
+        print(r)

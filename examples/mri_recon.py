@@ -20,8 +20,16 @@ housekeeping promise.  Force a multi-device host CPU with, e.g.::
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python examples/mri_recon.py --stream 16 --batch 8 --sharded
 
+``--pipeline`` additionally demonstrates the declarative operator-graph
+API (docs/pipeline.md): the same reconstruction wired as ``Pipeline(app) |
+FFT | ComplexElementProd | XImageSum`` and routed through all three
+execution modes of the unified front-end — ``pipe.run(kdata)``,
+``pipe.run(slices, mode="stream", batch=k)``, and ``pipe.run(requests,
+mode="serve", batch=k)`` — each verified bit-identical to the legacy
+imperative launch above.
+
 Run:  PYTHONPATH=src python examples/mri_recon.py [--fused] [--pallas]
-                                   [--stream N] [--batch K] [--sharded]
+                      [--stream N] [--batch K] [--sharded] [--pipeline]
 """
 import sys
 import time
@@ -29,9 +37,13 @@ import time
 import numpy as np
 
 from repro.configs.mri_recon import CONFIG
-from repro.core import (CLapp, DeviceTraits, DeviceType, KData, PlatformTraits,
-                        ProfileParameters, SyncSource, XData)
-from repro.processes import SimpleMRIRecon
+from repro.core import (CLapp, DeviceTraits, DeviceType, KData, Pipeline,
+                        PlatformTraits, ProfileParameters, SyncSource, XData)
+from repro.processes import (FFT, ComplexElementProd, SimpleMRIRecon,
+                             XImageSum)
+from repro.processes.coil_combine import CombineParams
+from repro.processes.complex_elementprod import ComplexElementProdParams
+from repro.processes.fft import FFTParams
 
 
 def synthetic_kdata(frames: int, coils: int, h: int, w: int, seed: int = 0):
@@ -118,6 +130,49 @@ def stream_slice_stack(app, proc, cfg, n_slices: int, batch: int,
     print("[stream] bit-identical to sequential launch(), oracle verified")
 
 
+def pipeline_demo(app, cfg, reference: np.ndarray, exact: bool = True) -> None:
+    """The declarative front-end: one validated graph, three modes, all
+    bit-identical to the legacy imperative launch (``reference``).
+    ``exact=False`` (legacy ran fused or with Pallas kernels) relaxes the
+    cross-check to numerical closeness."""
+    kdata, smaps, _ = synthetic_kdata(cfg.frames, cfg.coils, cfg.height,
+                                      cfg.width)
+    pipe = (Pipeline(app)
+            | FFT(app).bind(infile="kspace", outfile="xspace",
+                            params=FFTParams("backward", var="kdata"))
+            | ComplexElementProd(app).bind(
+                params=ComplexElementProdParams(conjugate=True))
+            | XImageSum(app).bind(params=CombineParams()))
+
+    t0 = time.perf_counter()
+    out = pipe.run(KData({"kdata": kdata, "sensitivity_maps": smaps}))
+    t_build = time.perf_counter() - t0
+    got = out.get_ndarray(0).host
+    if exact:
+        assert np.array_equal(got, reference), \
+            "pipeline launch must be bit-identical to the legacy protocol"
+        print(f"[pipeline] {pipe}: build+launch {t_build * 1e3:.1f} ms, "
+              "bit-identical to init()/launch()")
+    else:
+        np.testing.assert_allclose(got, reference, rtol=1e-4, atol=1e-4)
+        print(f"[pipeline] {pipe}: build+launch {t_build * 1e3:.1f} ms, "
+              "matches the fused/pallas legacy launch numerically")
+
+    slices = []
+    for s in range(4):
+        k, sm, _ = synthetic_kdata(cfg.frames, cfg.coils, cfg.height,
+                                   cfg.width, seed=300 + s)
+        slices.append(KData({"kdata": k, "sensitivity_maps": sm}))
+    streamed = pipe.run(slices, mode="stream", batch=2)
+    prof = ProfileParameters(enable=True)
+    served = pipe.run(slices, mode="serve", batch=2, profile=prof)
+    for st, sv in zip(streamed, served):
+        assert np.array_equal(st.get_ndarray(0).host, sv.get_ndarray(0).host)
+    print(f"[pipeline] stream == serve for {len(slices)} slices; "
+          f"serve p50 {prof.p50() * 1e3:.1f} ms / "
+          f"p99 {prof.p99() * 1e3:.1f} ms")
+
+
 def main() -> None:
     mode = "fused" if "--fused" in sys.argv else "staged"
     use_pallas = "--pallas" in sys.argv
@@ -161,6 +216,10 @@ def main() -> None:
 
     data_out.matlab_save("outputFrames.npz", "XData", SyncSource.HOST_ONLY)
     print("saved outputFrames.npz")
+
+    if "--pipeline" in sys.argv:
+        pipeline_demo(app, cfg, recon,
+                      exact=(mode == "staged" and not use_pallas))
 
     if n_stream:
         stream_slice_stack(app, proc, cfg, n_stream, batch, sharded=sharded)

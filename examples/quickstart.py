@@ -1,13 +1,18 @@
 """Quickstart: the paper's listing 1 — an intensity-inverting filter.
 
-Follows the 11-step path of §III-C exactly (step numbers in comments).
+Follows the path of §III-C with the declarative operator-graph front-end
+(docs/pipeline.md): declare the operator, bind its ports, run.  The
+paper's imperative 11-step listing (set handles, init, launch) still
+works — see the migration section of docs/pipeline.md — but new code
+wires operators with ``bind()`` + ``Pipeline``.
+
 Run:  PYTHONPATH=src python examples/quickstart.py [input.png] [output.png]
 """
 import sys
 
 import numpy as np
 
-from repro.core import (CLapp, DeviceTraits, PlatformTraits, Process,
+from repro.core import (CLapp, DeviceTraits, Pipeline, PlatformTraits,
                         ProfileParameters, SyncSource, XData)
 from repro.processes import Negate
 from repro.processes.negate import NegateParams
@@ -34,30 +39,21 @@ def main() -> None:
         yy, xx = np.mgrid[0:256, 0:256]
         img = (np.sin(xx / 17.0) * np.cos(yy / 11.0) * 0.5 + 0.5).astype(np.float32)
         data_in = XData({"img": img})
-    # Step 4: create output with same size as input
-    data_out = XData(data_in, copy_values=False)
 
-    # Step 5: register input and output (single-call transfer to the device)
-    h_in = app.addData(data_in)
-    h_out = app.addData(data_out)
+    # Step 4: declare the operator graph.  Ports are validated and the
+    # output is allocated from inferred specs — no handle plumbing, no
+    # manual output Data.  The first run() AOT-compiles (the paper's
+    # init); every further run() is a pure launch at ~zero overhead.
+    pipe = Pipeline(app) | Negate(app).bind(params=NegateParams(use_pallas=False))
 
-    # Step 6: create the process and set its I/O handles
-    proc = Negate(app)
-    proc.set_in_handle(h_in)
-    proc.set_out_handle(h_out)
-    proc.set_launch_parameters(NegateParams(use_pallas=False))
-
-    # Step 7: init (AOT compile) once, launch many times at ~zero overhead
-    proc.init()
+    # Step 5: run — repeatedly, against the one compiled executable
     prof = ProfileParameters(enable=True)
+    data_out = pipe.run(data_in)
     for _ in range(10):
-        proc.launch(prof)
-    print(f"mean launch time over 10 runs: {prof.mean * 1e6:.1f} us")
+        data_out = pipe.run(data_in, profile=prof)
+    print(f"mean launch time over 10 runs: {prof.mean() * 1e6:.1f} us")
 
-    # Step 8: get data back from the computing device
-    app.device2Host(h_out, SyncSource.BUFFER_ONLY)
-
-    # Step 9: save
+    # Step 6: results are already synced to host (sync=True default); save
     data_out.save(out_path, SyncSource.HOST_ONLY)
     print(f"wrote {out_path}")
 
@@ -66,10 +62,6 @@ def main() -> None:
     want = 1.0 - data_in.get_ndarray(0).host
     np.testing.assert_allclose(got, want, rtol=1e-6)
     print("negate output verified against oracle")
-
-    # Step 10: clean up
-    app.delData(h_in)
-    app.delData(h_out)
 
 
 if __name__ == "__main__":

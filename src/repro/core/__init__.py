@@ -32,6 +32,8 @@ from .arena import (
 from .data import Data, KData, NDArray, XData
 from .process import (
     DonatedBufferError,
+    Port,
+    PortError,
     Process,
     ProcessChain,
     ProfileParameters,
@@ -39,6 +41,7 @@ from .process import (
     aot_compile,
     compile_cache_stats,
 )
+from .graph import GraphError, Node, Pipeline
 from .registry import KernelCompileError, KernelEntry, KernelRegistry, kernel
 from .stream import BatchedProcess, StreamQueue, stream_launch
 from .sync import Coherence, SyncSource
@@ -46,12 +49,13 @@ from .sync import Coherence, SyncSource
 __all__ = [
     "ALIGN", "ArenaEntry", "ArenaLayout", "BatchedProcess", "CLapp",
     "CLIPERApp", "Coherence", "Data", "DataHandle", "DeviceTraits",
-    "DeviceType", "DonatedBufferError", "INVALID_HANDLE", "KData",
-    "KernelCompileError", "KernelEntry", "KernelRegistry", "NDArray",
-    "NoMatchingDeviceError", "PlatformTraits", "Process", "ProcessChain",
-    "ProfileParameters", "PureLaunchable", "StreamQueue", "SyncSource",
-    "XData", "aot_compile", "batched_spec", "compile_cache_stats",
-    "device_view", "kernel", "pack_device", "pack_host", "pack_tree_host",
-    "plan_layout", "split_batched_blob", "stack_host_blobs", "stream_launch",
+    "DeviceType", "DonatedBufferError", "GraphError", "INVALID_HANDLE",
+    "KData", "KernelCompileError", "KernelEntry", "KernelRegistry",
+    "NDArray", "Node", "NoMatchingDeviceError", "Pipeline", "PlatformTraits",
+    "Port", "PortError", "Process", "ProcessChain", "ProfileParameters",
+    "PureLaunchable", "StreamQueue", "SyncSource", "XData", "aot_compile",
+    "batched_spec", "compile_cache_stats", "device_view", "kernel",
+    "pack_device", "pack_host", "pack_tree_host", "plan_layout",
+    "split_batched_blob", "stack_host_blobs", "stream_launch",
     "unpack_device", "unpack_host", "unpack_tree_host",
 ]

@@ -154,6 +154,16 @@ class Data:
         d.layout = layout
         return d
 
+    @classmethod
+    def from_specs(cls, specs: Mapping[str, jax.ShapeDtypeStruct]) -> "Data":
+        """Spec-only Data from ``{name -> ShapeDtypeStruct}`` (the inverse
+        of :meth:`specs`).  Used by the Pipeline builder to allocate
+        intermediate/output edge Data from inferred operator specs."""
+        d = cls(None)
+        for name, s in specs.items():
+            d.add(NDArray(shape=s.shape, dtype=s.dtype, name=name))
+        return d
+
     def spec_clone(self) -> "Data":
         """Same-shaped, spec-only copy of this Data (the paper's
         ``XData(src, copy_values=False)`` generalised to any Data)."""

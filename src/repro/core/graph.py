@@ -1,0 +1,558 @@
+"""Declarative operator graphs: :class:`Node`, :class:`Pipeline`.
+
+The paper promises that algorithms read as mathematical operators — input,
+output, parameters — chained "easily and efficiently".  This module is that
+front-end.  A :class:`~repro.core.process.Process` declares typed ports and
+is wired *functionally* with :meth:`~repro.core.process.Process.bind`, which
+maps ports to **named edges** (or concrete Data)::
+
+    fft  = FFT(app).bind(infile="kspace", outfile="xspace",
+                         params=FFTParams("backward", var="kdata"))
+    prod = ComplexElementProd(app).bind(infile="xspace", outfile="weighted")
+    comb = XImageSum(app).bind(infile="weighted", outfile="image")
+
+    pipe = Pipeline(app) | fft | prod | comb          # linear: auto-wires too
+    pipe = Pipeline.from_graph(app, [fft, prod, comb])  # explicit DAG
+
+One validated graph, three execution modes through a single front-end::
+
+    out  = pipe.run(kdata)                                  # AOT launch
+    outs = pipe.run(slices,   mode="stream", batch=8, sharded=True)
+    outs = pipe.run(requests, mode="serve",  batch=8)
+
+Validation happens at **bind/build time**, never at launch:
+
+* binding an undeclared port, or concrete Data that violates a
+  :class:`~repro.core.process.Port` spec -> :class:`~repro.core.process.
+  PortError` from ``bind()`` itself;
+* consuming an edge no node produces, producing one edge twice, cycles,
+  multiple graph inputs -> :class:`GraphError` from ``|`` / ``from_graph``;
+* inter-node shape/dtype mismatches -> :class:`~repro.core.process.
+  PortError` from ``build()``, via each process's ``out_specs`` inference
+  (``jax.eval_shape`` — nothing is compiled or executed to reject a graph).
+
+``build()`` allocates intermediate/output Data from the inferred specs,
+wires the node processes over arena handles (zero-copy chaining, exactly as
+the imperative protocol did), AOT-compiles once, and caches the built state
+— repeated ``run()`` calls reuse the compiled executable, preserving the
+paper's zero-per-iteration-overhead property in all three modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from .app import CLapp, DataHandle
+from .data import Data
+from .process import (Port, PortError, Process, ProcessChain,
+                      ProfileParameters)
+
+
+class GraphError(ValueError):
+    """The operator graph is mis-wired (unknown edge, duplicate producer,
+    cycle, ambiguous input/output).  Raised while the graph is being
+    composed or built — never at launch."""
+
+
+def _is_edge(b: Any) -> bool:
+    return isinstance(b, str)
+
+
+def _is_data(b: Any) -> bool:
+    return isinstance(b, Data)
+
+
+def _is_handle(b: Any) -> bool:
+    return isinstance(b, int) and not isinstance(b, bool)
+
+
+class Node:
+    """One bound operator: a Process plus port->edge/Data bindings.
+
+    Create via :meth:`Process.bind`.  Construction validates the bindings
+    against the process's declared ports — unknown port names and
+    port-violating concrete Data raise :class:`PortError` immediately.
+    """
+
+    def __init__(self, process: Process, in_bind: Any = None,
+                 out_bind: Any = None,
+                 aux_bind: Optional[Mapping[str, Any]] = None):
+        self.process = process
+        self.in_bind = in_bind
+        self.out_bind = out_bind
+        self.aux_bind: Dict[str, Any] = dict(aux_bind or {})
+        self.name = type(process).__name__
+        self._validate_bindings()
+
+    def _validate_bindings(self) -> None:
+        ports = self.process.ports
+        aux_ports = {k for k, p in ports.items() if p.aux}
+        unknown = set(self.aux_bind) - aux_ports
+        if unknown:
+            raise PortError(
+                f"{self.name}.bind: no aux port(s) named {sorted(unknown)}; "
+                f"declared aux ports: {sorted(aux_ports)}")
+        for slot, bind in (("in", self.in_bind), ("out", self.out_bind)):
+            if bind is not None and slot not in ports:
+                raise PortError(f"{self.name}.bind: process declares no "
+                                f"{slot!r} port")
+            if not (bind is None or _is_edge(bind) or _is_data(bind)
+                    or _is_handle(bind)):
+                raise PortError(
+                    f"{self.name}.bind: {slot!r} must be an edge name, a "
+                    f"Data, or a DataHandle, got {type(bind).__name__}")
+        for aname, bind in self.aux_bind.items():
+            if not (_is_data(bind) or _is_handle(bind)):
+                raise PortError(
+                    f"{self.name}.bind: aux port {aname!r} must be bound to "
+                    f"a concrete Data or DataHandle (aux edges cannot be "
+                    f"produced by other nodes), got {type(bind).__name__}")
+            if _is_data(bind):
+                ports[aname].validate(bind.specs(), owner=self.name,
+                                      port=aname)
+        if _is_data(self.in_bind):
+            ports["in"].validate(self.in_bind.specs(), owner=self.name,
+                                 port="in")
+
+    def __repr__(self):
+        return (f"Node({self.name}, in={self.in_bind!r}, "
+                f"out={self.out_bind!r}, aux={sorted(self.aux_bind)})")
+
+
+@dataclasses.dataclass
+class _Built:
+    """State cached by :meth:`Pipeline.build`."""
+
+    executor: Process                       # single node or ProcessChain
+    handles: Dict[str, DataHandle]          # edge name -> registered handle
+    input_handle: DataHandle
+    output_handle: DataHandle
+    input_layout: Any                       # ArenaLayout of the input edge
+
+
+class Pipeline:
+    """A validated DAG of bound operator nodes with one front-end for all
+    execution modes (see the module docstring for the full story).
+
+    Linear composition: ``Pipeline(app) | node | node``.  Unbound ports are
+    auto-wired — a node without an ``in`` binding consumes the previous
+    node's output edge; missing edge names are generated.  Non-linear DAGs
+    (forks over named edges) go through :meth:`from_graph`.
+
+    ``fuse=True`` traces the whole graph as ONE XLA program (the
+    beyond-paper fusion win); the default is the paper-faithful staged
+    chain.  Both are bit-identical to the legacy imperative protocol.
+    """
+
+    def __init__(self, app: CLapp, nodes: Sequence[Node | Process] = (), *,
+                 fuse: bool = False, output: Optional[str] = None):
+        self.app = app
+        self.fuse = fuse
+        self.nodes: List[Node] = [self._as_node(n) for n in nodes]
+        self._requested_output = output
+        self._built: Optional[_Built] = None
+        self._plan_edges()
+
+    @staticmethod
+    def _as_node(n: Node | Process) -> Node:
+        if isinstance(n, Node):
+            return n
+        if isinstance(n, Process):
+            return Node(n)
+        raise GraphError(f"cannot compose {type(n).__name__} into a "
+                         "Pipeline (expected Node or Process)")
+
+    def __or__(self, other: Node | Process) -> "Pipeline":
+        return Pipeline(self.app, self.nodes + [self._as_node(other)],
+                        fuse=self.fuse, output=self._requested_output)
+
+    # ------------------------------------------------------------- planning
+    def _plan_edges(self) -> None:
+        """Resolve every node's in/out edge name; validate single-producer,
+        known-consumer wiring.  Raises GraphError on mis-wiring."""
+        self._in_edges: List[str] = []
+        self._out_edges: List[str] = []
+        self._input_data: Optional[Data] = None
+        self._output_data: Optional[Data] = None
+        self._input_handle: Optional[DataHandle] = None
+        self._output_handle: Optional[DataHandle] = None
+        self._input_edge: Optional[str] = None
+        self._output_edge: Optional[str] = None
+        if not self.nodes:
+            return
+        producers: Dict[str, int] = {}
+        for i, node in enumerate(self.nodes):
+            b = node.in_bind
+            if i == 0:
+                if _is_data(b):
+                    self._input_data = b
+                    edge = "_in"
+                elif _is_handle(b):
+                    self._input_handle = b
+                    edge = "_in"
+                else:
+                    edge = b if _is_edge(b) else "_in"
+                self._input_edge = edge
+                producers[edge] = -1
+            else:
+                if b is None:
+                    edge = self._out_edges[i - 1]
+                elif _is_edge(b):
+                    if b not in producers:
+                        raise GraphError(
+                            f"node {i} ({node.name}) consumes edge {b!r} "
+                            f"which no upstream node produces (known edges: "
+                            f"{sorted(producers)})")
+                    edge = b
+                else:
+                    raise GraphError(
+                        f"node {i} ({node.name}): only the first node may "
+                        "bind a concrete input Data/handle; bind side "
+                        "inputs as aux ports instead")
+            out = node.out_bind
+            if _is_data(out) or _is_handle(out):
+                if i != len(self.nodes) - 1:
+                    raise GraphError(
+                        f"node {i} ({node.name}): only the last node may "
+                        "bind a concrete output Data/handle")
+                if _is_data(out):
+                    self._output_data = out
+                else:
+                    self._output_handle = out
+                out_edge = "_out"
+            else:
+                out_edge = out if _is_edge(out) else f"_e{i}"
+            if out_edge in producers:
+                raise GraphError(
+                    f"edge {out_edge!r} has two producers (node "
+                    f"{producers[out_edge]} and node {i} ({node.name}))")
+            producers[out_edge] = i
+            self._in_edges.append(edge)
+            self._out_edges.append(out_edge)
+        requested = self._requested_output
+        if requested is not None:
+            if requested not in producers or producers[requested] < 0:
+                raise GraphError(f"requested output edge {requested!r} is "
+                                 "not produced by any node")
+            self._output_edge = requested
+        else:
+            self._output_edge = self._out_edges[-1]
+        if self.fuse and self._output_edge != self._out_edges[-1]:
+            raise GraphError(
+                f"fuse=True requires the output edge ({self._output_edge!r})"
+                " to be produced by the last node; reorder the nodes or use "
+                "staged mode")
+
+    @classmethod
+    def from_graph(cls, app: CLapp, nodes: Sequence[Node | Process], *,
+                   output: Optional[str] = None,
+                   fuse: bool = False) -> "Pipeline":
+        """Build a Pipeline from explicitly-bound nodes forming a DAG with
+        named edges (order-independent; topologically sorted here).
+
+        Exactly one edge may be consumed without being produced — the graph
+        input (a concrete-Data ``in`` binding also marks its node as the
+        input node).  Cycles, duplicate producers, and multiple graph
+        inputs raise :class:`GraphError`.  ``output`` selects the output
+        edge when more than one edge is left unconsumed.
+        """
+        node_list = [cls._as_node(n) for n in nodes]
+        produced: Dict[str, int] = {}
+        for i, node in enumerate(node_list):
+            out = node.out_bind
+            edge = out if _is_edge(out) else f"_n{i}"
+            if edge in produced:
+                raise GraphError(
+                    f"edge {edge!r} has two producers (node "
+                    f"{produced[edge]} and node {i} ({node.name}))")
+            produced[edge] = i
+
+        # classify inputs; every unproduced in-edge must be the SAME edge
+        input_edges = set()
+        deps: Dict[int, List[int]] = {i: [] for i in range(len(node_list))}
+        for i, node in enumerate(node_list):
+            b = node.in_bind
+            if _is_data(b) or _is_handle(b) or b is None:
+                input_edges.add(f"_in#{i}" if b is None else "_data")
+            elif _is_edge(b):
+                if b in produced:
+                    deps[i].append(produced[b])
+                else:
+                    input_edges.add(b)
+            else:
+                raise GraphError(
+                    f"node {i} ({node.name}): in binding must be an edge "
+                    "name or (for the input node) a concrete Data/handle")
+        if len(input_edges) != 1:
+            raise GraphError(
+                f"graph must have exactly one input, found "
+                f"{sorted(input_edges) or 'none'}; bind extra inputs as aux "
+                "ports")
+
+        # Kahn topological sort (stable: prefers given order)
+        remaining = set(range(len(node_list)))
+        order: List[int] = []
+        while remaining:
+            ready = [i for i in sorted(remaining)
+                     if all(d not in remaining for d in deps[i])]
+            if not ready:
+                cyc = sorted(node_list[i].name for i in remaining)
+                raise GraphError(f"operator graph has a cycle through {cyc}")
+            order.extend(ready)
+            remaining -= set(ready)
+        ordered = [node_list[i] for i in order]
+        if output is not None:
+            # place the output producer last when nothing depends on it, so
+            # fused mode (chain output = last stage output) stays possible
+            prod_idx = order.index(produced[output]) if output in produced \
+                else -1
+            if prod_idx >= 0 and all(produced.get(n.in_bind) !=
+                                     produced[output]
+                                     for n in node_list if _is_edge(n.in_bind)):
+                ordered.append(ordered.pop(prod_idx))
+        return cls(app, ordered, fuse=fuse, output=output)
+
+    # ---------------------------------------------------------------- build
+    @property
+    def built(self) -> bool:
+        return self._built is not None
+
+    def build(self, input_data: Optional[Data] = None) -> _Built:
+        """Validate the full graph against every port, allocate edge Data,
+        wire the processes, and AOT-compile — the expensive one-time work
+        (the paper's ``init()``), done once and cached.
+
+        All validation (ports, inferred inter-node specs) happens BEFORE
+        anything is registered or compiled, so a mis-wired graph is
+        rejected without side effects.
+        """
+        if self._built is not None:
+            return self._built
+        if not self.nodes:
+            raise GraphError("cannot build an empty pipeline")
+        app = self.app
+        data_in = input_data if input_data is not None else self._input_data
+        if data_in is None and self._input_handle is not None:
+            data_in = app.getData(self._input_handle)
+        if data_in is None:
+            raise GraphError(
+                "pipeline has no input: bind the first node's 'in' port to "
+                "a Data or registered handle, or pass inputs to "
+                "run()/build()")
+
+        # ---- pure validation pass: specs flow edge to edge ----------------
+        edge_specs: Dict[str, Dict[str, jax.ShapeDtypeStruct]] = {
+            self._input_edge: data_in.specs()}
+        node_aux: List[Dict[str, Any]] = []
+        for i, node in enumerate(self.nodes):
+            p = node.process
+            ports = p.ports
+            in_specs = edge_specs[self._in_edges[i]]
+            ports.get("in", Port()).validate(in_specs, owner=node.name,
+                                             port="in")
+            aux_specs: Dict[str, Dict[str, jax.ShapeDtypeStruct]] = {}
+            aux_bound: Dict[str, Any] = {}
+            for aname, aport in ports.items():
+                if not aport.aux:
+                    continue
+                bound = node.aux_bind.get(aname)
+                if bound is None:
+                    if not aport.optional:
+                        raise PortError(
+                            f"{node.name}.ports[{aname!r}]: required aux "
+                            "port is unbound")
+                    continue
+                adata = bound if _is_data(bound) else app.getData(bound)
+                specs = adata.specs()
+                aport.validate(specs, owner=node.name, port=aname)
+                aux_specs[aname] = specs
+                aux_bound[aname] = bound
+            node_aux.append(aux_bound)
+            try:
+                out_specs = p.out_specs(in_specs, aux_specs)
+            except PortError:
+                raise
+            except Exception as e:
+                raise PortError(
+                    f"{node.name}: output spec inference failed for input "
+                    f"specs {sorted(in_specs)} — the graph is mis-wired "
+                    f"({e})") from e
+            ports.get("out", Port()).validate(out_specs, owner=node.name,
+                                              port="out")
+            edge_specs[self._out_edges[i]] = out_specs
+        bound_out = self._output_data
+        if self._output_handle is not None:
+            bound_out = app.getData(self._output_handle)
+        if bound_out is not None:
+            want = edge_specs[self._output_edge]
+            got = bound_out.specs()
+            if {k: (tuple(s.shape), jax.numpy.dtype(s.dtype)) for k, s in got.items()} != \
+               {k: (tuple(s.shape), jax.numpy.dtype(s.dtype)) for k, s in want.items()}:
+                raise PortError(
+                    f"bound output Data specs {got} do not match the "
+                    f"inferred pipeline output specs {want}")
+
+        # ---- registration + wiring (validation passed) --------------------
+        # the input edge gets a PRIVATE buffer (spec clone of the example
+        # input): the caller's Data is only read, never adopted — run()
+        # points the buffer's host arrays at each new input (zero-copy).
+        # An explicitly handle-bound input IS the buffer (the caller
+        # registered it; paper addData semantics).
+        handles: Dict[str, DataHandle] = {
+            self._input_edge:
+                self._input_handle if self._input_handle is not None
+                else app.addData(Data.from_specs(data_in.specs()),
+                                 to_device=False)}
+        for i, node in enumerate(self.nodes):
+            edge = self._out_edges[i]
+            if edge in handles:
+                continue
+            if edge == self._output_edge and self._output_handle is not None:
+                handles[edge] = self._output_handle
+                continue
+            if edge == self._output_edge and self._output_data is not None:
+                d = self._output_data
+            else:
+                d = Data.from_specs(edge_specs[edge])
+            handles[edge] = app.addData(d, to_device=False)
+        aux_handle_of: Dict[int, DataHandle] = {}  # id(Data) -> handle
+        procs: List[Process] = []
+        for i, node in enumerate(self.nodes):
+            p = node.process
+            if p._app is None:
+                p._app = app
+            p.in_handle = handles[self._in_edges[i]]
+            p.out_handle = handles[self._out_edges[i]]
+            for aname, bound in node_aux[i].items():
+                if _is_handle(bound):
+                    h = bound
+                else:
+                    h = aux_handle_of.get(id(bound))
+                    if h is None:
+                        h = app.addData(bound)
+                        aux_handle_of[id(bound)] = h
+                p.aux_handles[aname] = h
+            procs.append(p)
+
+        if len(procs) == 1:
+            executor: Process = procs[0]
+        else:
+            executor = ProcessChain(
+                app, procs, mode="fused" if self.fuse else "staged")
+        executor.init()
+        self._built = _Built(
+            executor=executor,
+            handles=handles,
+            input_handle=handles[self._input_edge],
+            output_handle=handles[self._output_edge],
+            input_layout=app.getData(handles[self._input_edge]).layout,
+        )
+        return self._built
+
+    # ------------------------------------------------------------------ run
+    def run(self, inputs: Any = None, *, mode: str = "launch",
+            batch: int = 1, sharded: bool = False, depth: int = 2,
+            sync: bool = True, tail_waste_threshold: float = 0.5,
+            profile: Optional[ProfileParameters] = None) -> Any:
+        """Route the validated graph through one of three execution modes.
+
+        ======== =========================== ================================
+        mode     inputs                      returns
+        ======== =========================== ================================
+        launch   one Data (or None if bound) the output Data
+        stream   sequence of Data            one output Data per input
+        serve    sequence of Data (requests) one output Data per request, in
+                                             submit order; per-request
+                                             latency recorded on ``profile``
+        ======== =========================== ================================
+
+        ``batch``/``sharded``/``depth``/``tail_waste_threshold`` apply to
+        the stream and serve modes (see :meth:`Process.stream`).  With
+        ``sync=True`` (default) results are copied back to host arrays;
+        otherwise they stay device-fresh.  All three modes execute the SAME
+        compiled per-item computation — outputs are bit-identical across
+        modes and to the legacy imperative protocol.
+        """
+        if mode == "launch":
+            if inputs is not None and not isinstance(inputs, Data):
+                raise TypeError(
+                    f"mode='launch' takes one Data, got "
+                    f"{type(inputs).__name__}; use mode='stream' for "
+                    "sequences")
+            built = self.build(inputs)
+            app = self.app
+            src = inputs if inputs is not None else self._input_data
+            d_reg = app.getData(built.input_handle)
+            if src is not None and src is not d_reg:
+                self._copy_into(d_reg, src)
+                app.host2device(built.input_handle)
+            elif d_reg.device_blob is None:
+                # handle-bound input: the caller manages the registered
+                # Data; only transfer if it has never reached the device
+                app.host2device(built.input_handle)
+            built.executor.launch(profile)
+            out = app.getData(built.output_handle)
+            if sync:
+                out.sync_to_host()
+            return out
+        if mode == "stream":
+            datasets = list(inputs or ())
+            if not datasets:
+                return []
+            built = self.build(datasets[0])
+            return built.executor.stream(
+                datasets, batch=batch, depth=depth, sync=sync,
+                sharded=sharded, tail_waste_threshold=tail_waste_threshold,
+                profile=profile)
+        if mode == "serve":
+            requests = list(inputs or ())
+            if not requests:
+                return []
+            server = self.serve(batch=batch, sharded=sharded, depth=depth,
+                                tail_waste_threshold=tail_waste_threshold)
+            rids = [server.submit(d) for d in requests]
+            by_rid = {r.rid: r for r in server.drain()}
+            outs = []
+            for rid in rids:
+                resp = by_rid[rid]
+                if profile is not None and profile.enable:
+                    profile.record(resp.latency_s)
+                if sync:
+                    resp.data.sync_to_host()
+                outs.append(resp.data)
+            return outs
+        raise ValueError(f"unknown mode {mode!r}: expected "
+                         "'launch' | 'stream' | 'serve'")
+
+    def serve(self, *, batch: int = 8, sharded: bool = False, depth: int = 2,
+              tail_waste_threshold: float = 0.5):
+        """A standing request/response loop over this pipeline (admission
+        queue -> dynamic batcher -> batched sharded streaming); see
+        :class:`repro.serve.pipeline.PipelineServer`."""
+        from repro.serve.pipeline import PipelineServer  # lazy: serve layer
+
+        return PipelineServer(self, batch=batch, sharded=sharded,
+                              depth=depth,
+                              tail_waste_threshold=tail_waste_threshold)
+
+    @staticmethod
+    def _copy_into(dst: Data, src: Data) -> None:
+        if src.layout is None:
+            src.plan()
+        if dst.layout is None:
+            dst.plan()
+        if dst.layout != src.layout:
+            raise PortError(
+                f"input Data layout {src.layout} does not match the layout "
+                f"the pipeline was built for ({dst.layout})")
+        for a_dst, a_src in zip(dst, src):
+            if a_src.host is None:
+                raise PortError(
+                    f"input array {a_src.name!r} has no host values")
+            a_dst.set_host(a_src.host)
+
+    def __repr__(self):
+        stages = " | ".join(n.name for n in self.nodes) or "<empty>"
+        return f"Pipeline[{stages}]"

@@ -1,32 +1,54 @@
 """Process — the paper's algorithm abstraction (§III-A.3b, §III-B).
 
-A Process is a mathematical operator with input/output Data handles and
-parameters.  The paper's two key properties are reproduced exactly:
+A Process is a mathematical operator: typed input/output **ports**, launch
+parameters, and a pure :meth:`Process.apply`.  There are two ways to wire
+operators to Data, and one engine underneath both:
+
+* **Declarative (preferred)** — a Process declares its contract as typed
+  ports (``ports = {"in": Port(...), "out": Port(...), "smaps":
+  Port(aux=True)}``) and is wired *functionally*::
+
+      fft  = FFT(app).bind(infile="kspace", outfile="xspace",
+                           params=FFTParams("backward", var="kdata"))
+      pipe = Pipeline(app) | fft | elemprod | coil_combine
+      out  = pipe.run(kdata)                       # mode="launch"
+      outs = pipe.run(slices, mode="stream", batch=8, sharded=True)
+      outs = pipe.run(requests, mode="serve", batch=8)
+
+  ``bind()`` maps ports to named graph edges (or concrete Data); the
+  :class:`~repro.core.graph.Pipeline` shape/dtype-checks the whole graph
+  against every port at *bind/build* time — a mis-wired graph is rejected
+  with :class:`PortError`/:class:`~repro.core.graph.GraphError` before
+  anything compiles or launches.  See :mod:`repro.core.graph` and
+  ``docs/pipeline.md``.
+
+* **Imperative (legacy, deprecated)** — the paper-style mutate-then-init
+  protocol: ``set_in_handle``/``set_out_handle``/``set_aux_handle`` followed
+  by ``init()``/``launch()``.  The setters still work (bit-identical
+  results) but emit a ``DeprecationWarning`` once per process instance.
+
+The paper's two key properties hold under both front-ends:
 
 * **init/launch split** — ``init()`` does the one-time expensive setup.  In
-  OpenCL that is kernel argument setup and (for clFFT) plan baking; in JAX it
-  is tracing + XLA compilation, which is orders of magnitude more expensive
-  than a launch.  ``init()`` AOT-compiles (``jit(...).lower(...).compile()``)
-  and caches the executable; ``launch()`` only executes it.
+  OpenCL that is kernel argument setup and (for clFFT) plan baking; in JAX
+  it is tracing + XLA compilation.  ``init()`` AOT-compiles
+  (``jit(...).lower(...).compile()``) and caches the executable;
+  ``launch()`` only executes it.  ``Pipeline`` runs the same init at
+  ``build()``, so chains and loops keep the zero-per-iteration-overhead
+  property in all three execution modes.
 
 * **zero-copy chaining** — Data stays on the device as one arena blob.
-  Setting a stage's output handle as the next stage's input handle moves no
-  bytes; in-place processes (out == in) *donate* the input buffer to XLA so
-  not even a device-side copy is made.
+  A stage's output handle doubling as the next stage's input handle moves
+  no bytes; in-place processes (out == in) *donate* the input buffer to
+  XLA so not even a device-side copy is made.
 
 Beyond the paper: a :class:`ProcessChain` can be *fused* — the composed
 stages are traced as one program, letting XLA fuse across stage boundaries
-(impossible with OpenCL's per-kernel dispatch).  Staged mode is the
-paper-faithful baseline; fused mode is the measured beyond-paper gain.
-
-Streaming (beyond-paper, production-shaped): every Process exposes
-:meth:`Process.stream`, which runs MANY independent Data sets through the
-one compiled program — batched along a leading axis (one launch per k data
-sets via ``vmap``) and double-buffered (batch *i+1*'s arena blob is in
-flight to the device while batch *i* executes).  See
-:mod:`repro.core.stream` for the executor pieces (StreamQueue /
-BatchedProcess).  The single-shot ``init()/launch()`` API stays intact as
-the paper-faithful baseline.
+(impossible with OpenCL's per-kernel dispatch); and every Process exposes
+:meth:`Process.stream` — many independent Data sets through one compiled
+program, batched via ``vmap`` and double-buffered (see
+:mod:`repro.core.stream`), with ragged-tail batches recompiled small when
+padding would be wasteful.
 
 Donation safety: a program compiled in-place (``out_handle == in_handle``)
 donates its input buffer to XLA.  ``launch()`` refuses to run such a
@@ -38,9 +60,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .app import CLapp, DataHandle, INVALID_HANDLE
@@ -50,7 +74,12 @@ from .sync import Coherence
 
 @dataclasses.dataclass
 class ProfileParameters:
-    """Collects per-launch wall times when enabled (paper's profiling arg)."""
+    """Collects per-launch wall times when enabled (paper's profiling arg).
+
+    All statistics are total functions: with zero recorded samples (e.g.
+    ``launch()`` was never profiled) they return ``float("nan")`` instead
+    of dividing by zero.
+    """
 
     enable: bool = False
     samples: List[float] = dataclasses.field(default_factory=list)
@@ -59,9 +88,83 @@ class ProfileParameters:
         if self.enable:
             self.samples.append(seconds)
 
-    @property
     def mean(self) -> float:
-        return float(np.mean(self.samples)) if self.samples else float("nan")
+        """Mean recorded wall time; ``nan`` when nothing was profiled."""
+        if not self.samples:
+            return float("nan")
+        return float(sum(self.samples) / len(self.samples))
+
+    def percentile(self, p: float) -> float:
+        """p-th percentile of the samples; ``nan`` when nothing was
+        profiled.  Used by the serving-latency benchmark (p50/p99)."""
+        if not self.samples:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.samples), p))
+
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+
+class PortError(TypeError):
+    """A Data set does not satisfy a Process port declaration, or a node
+    was bound to a port that does not exist.  Raised at bind/build time —
+    before any compilation or launch."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Port:
+    """Typed declaration of one Process input/output/aux slot.
+
+    Processes declare their wiring contract as a class attribute::
+
+        class ComplexElementProd(Process):
+            ports = {"in":    Port(names=("kdata",)),
+                     "out":   Port(names=("kdata",)),
+                     "smaps": Port(aux=True, optional=True)}
+
+    The reserved port names ``"in"`` and ``"out"`` are the primary input
+    and output; every ``Port(aux=True)`` entry is an aux (side-input) port
+    keyed by its own name.  ``validate()`` checks a candidate Data's specs
+    against the declaration and raises :class:`PortError` on mismatch —
+    this is what lets :class:`~repro.core.graph.Pipeline` reject mis-wired
+    graphs at bind time instead of at launch.
+    """
+
+    aux: bool = False            # side input (broadcast in batched modes)
+    optional: bool = False       # aux only: may stay unbound
+    names: Optional[Tuple[str, ...]] = None  # NDArray names the Data must hold
+    dtype: Any = None            # required dtype (concrete or abstract kind)
+    ndim: Optional[int] = None   # required rank of the checked arrays
+    doc: str = ""
+
+    def __post_init__(self):
+        if self.names is not None:
+            object.__setattr__(self, "names", tuple(self.names))
+
+    def validate(self, specs: Mapping[str, jax.ShapeDtypeStruct], *,
+                 owner: str = "?", port: str = "?") -> None:
+        """Check ``{array name -> ShapeDtypeStruct}`` against this port."""
+        where = f"{owner}.ports[{port!r}]"
+        if self.names:
+            missing = [n for n in self.names if n not in specs]
+            if missing:
+                raise PortError(
+                    f"{where}: Data is missing required arrays {missing} "
+                    f"(got {sorted(specs)})")
+        for name in (self.names or tuple(specs)):
+            s = specs[name]
+            if self.dtype is not None and not jnp.issubdtype(
+                    jnp.dtype(s.dtype), self.dtype):
+                raise PortError(
+                    f"{where}: array {name!r} has dtype {s.dtype}, "
+                    f"expected {self.dtype}")
+            if self.ndim is not None and len(s.shape) != self.ndim:
+                raise PortError(
+                    f"{where}: array {name!r} has shape {tuple(s.shape)} "
+                    f"(ndim {len(s.shape)}), expected ndim {self.ndim}")
 
 
 # --------------------------------------------------------------------------
@@ -137,6 +240,21 @@ def aot_compile(fn: Callable, specs: Sequence[Any], *, tag: str,
     return compiled
 
 
+def _layout_fingerprint(app, la: "PureLaunchable") -> Any:
+    """Hashable fingerprint of every arena layout a compiled program bakes
+    in (input, output, aux).  Folded into the compile-cache static key:
+    the blob *specs* only carry total byte sizes, and two different
+    layouts can round up to the same arena size — without this they would
+    collide on one executable that unpacks the wrong shapes."""
+    aux_layouts = []
+    for h in la.aux_handles:
+        d = app.getData(h)
+        if d.layout is None:
+            d.plan()
+        aux_layouts.append(d.layout)
+    return (la.in_layout, la.out_layout, tuple(aux_layouts))
+
+
 class DonatedBufferError(RuntimeError):
     """A process compiled with input donation (in-place) was launched after
     its handles were re-wired to out != in.  Running it would donate the
@@ -166,11 +284,17 @@ class PureLaunchable:
 
 class Process:
     """Base class for operators.  Subclasses implement :meth:`apply` (a pure
-    function from named device views to named output arrays) and optionally
-    override :meth:`init` to add their own one-time work."""
+    function from named device views to named output arrays), declare their
+    wiring contract in :attr:`ports`, and optionally override :meth:`init`
+    to add their own one-time work."""
 
     #: kernels this process needs from the registry (loaded lazily in init)
     kernel_names: Sequence[str] = ()
+
+    #: typed wiring contract: ``"in"``/``"out"`` are the primary input and
+    #: output; entries with ``Port(aux=True)`` are side inputs keyed by
+    #: their own name.  Subclasses override to tighten the contract.
+    ports: Dict[str, Port] = {"in": Port(), "out": Port()}
 
     def __init__(self, app: Optional[CLapp] = None):
         self._app = app
@@ -182,20 +306,72 @@ class Process:
         self._compiled = None
         self._compiled_in_place = False
         self._initialized = False
+        self._legacy_warned = False
 
-    # -- wiring (paper: setInHandle / setOutHandle / setLaunchParameters) ----
+    # -- wiring ---------------------------------------------------------------
     def getApp(self) -> CLapp:
         if self._app is None:
             raise RuntimeError("process not bound to a CLapp")
         return self._app
 
+    def bind(self, infile: Any = None, outfile: Any = None, *,
+             params: Any = None, **aux: Any):
+        """Declaratively wire this process; returns a
+        :class:`~repro.core.graph.Node` for :class:`~repro.core.graph.
+        Pipeline` composition.
+
+        ``infile``/``outfile`` bind the ``"in"``/``"out"`` ports; every
+        other keyword binds the same-named aux port.  A binding is either a
+        **named edge** (str) connecting to other nodes in the graph, or a
+        concrete :class:`~repro.core.data.Data` (/registered DataHandle).
+        Concrete bindings are port-validated immediately — a mis-typed Data
+        raises :class:`PortError` here, at bind time.  ``params`` forwards
+        to :meth:`set_launch_parameters`.
+        """
+        from .graph import Node  # local import: graph builds on Process
+
+        if params is not None:
+            self.set_launch_parameters(params)
+        return Node(self, in_bind=infile, out_bind=outfile, aux_bind=aux)
+
+    def out_specs(self, in_specs: Mapping[str, jax.ShapeDtypeStruct],
+                  aux_specs: Optional[Mapping[str, Mapping[str, jax.ShapeDtypeStruct]]] = None,
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """Infer the named output specs from input specs WITHOUT running or
+        compiling anything (``jax.eval_shape`` over :meth:`apply`).  The
+        Pipeline uses this to allocate intermediate/output Data and to
+        shape/dtype-check the whole graph at build time.  Composite
+        processes that override :meth:`launch` instead of :meth:`apply`
+        must override this too."""
+        params = self.launch_params
+        out = jax.eval_shape(
+            lambda v, a: self.apply(v, a, params),
+            {k: jax.ShapeDtypeStruct(s.shape, s.dtype) for k, s in in_specs.items()},
+            {n: {k: jax.ShapeDtypeStruct(s.shape, s.dtype) for k, s in d.items()}
+             for n, d in (aux_specs or {}).items()})
+        return {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in out.items()}
+
+    # -- legacy imperative wiring (paper: setInHandle / setOutHandle) ---------
+    def _warn_legacy_setters(self) -> None:
+        if not self._legacy_warned:
+            self._legacy_warned = True
+            warnings.warn(
+                f"{type(self).__name__}.set_in_handle/set_out_handle/"
+                "set_aux_handle are deprecated: declare ports and wire with "
+                "Process.bind(...) + Pipeline (see docs/pipeline.md).  The "
+                "legacy protocol keeps working and stays bit-identical.",
+                DeprecationWarning, stacklevel=3)
+
     def set_in_handle(self, h: DataHandle) -> None:
+        self._warn_legacy_setters()
         self.in_handle = h
 
     def set_out_handle(self, h: DataHandle) -> None:
+        self._warn_legacy_setters()
         self.out_handle = h
 
     def set_aux_handle(self, name: str, h: DataHandle) -> None:
+        self._warn_legacy_setters()
         self.aux_handles[name] = h
 
     def set_launch_parameters(self, params: Any) -> None:
@@ -305,7 +481,7 @@ class Process:
             specs,
             tag=la.tag,
             donate_argnums=(0,) if la.in_place else (),
-            static_key=la.static_key,
+            static_key=(la.static_key, _layout_fingerprint(app, la)),
             mesh=app.mesh,
         )
         self._compiled_in_place = la.in_place
@@ -350,6 +526,7 @@ class Process:
     # -- streaming (beyond paper; see repro.core.stream) -----------------------
     def stream(self, datasets: Sequence[Any], batch: int = 1, *,
                depth: int = 2, sync: bool = False, sharded: bool = False,
+               tail_waste_threshold: float = 0.5,
                profile: ProfileParameters | None = None) -> List[Any]:
         """Run many independent input Data sets through this process.
 
@@ -366,11 +543,19 @@ class Process:
         spread over ALL selected devices, aux blobs replicated; results are
         bit-identical and each item's output stays on the device that
         computed it.  Requires ``batch`` divisible by the device count.
+
+        Ragged tail: when the final batch has fewer than ``batch`` items
+        and the padding waste fraction exceeds ``tail_waste_threshold``, a
+        second, smaller executable is compiled for the tail instead of
+        padding by repetition (set the threshold ``>= 1.0`` to always pad,
+        the pre-tail behaviour).
         """
         from .stream import stream_launch  # local import: avoid cycle
 
         return stream_launch(self, datasets, batch=batch, depth=depth,
-                             sync=sync, sharded=sharded, profile=profile)
+                             sync=sync, sharded=sharded,
+                             tail_waste_threshold=tail_waste_threshold,
+                             profile=profile)
 
 
 class ProcessChain(Process):
@@ -429,11 +614,14 @@ class ProcessChain(Process):
         handle_ids: Dict[DataHandle, int] = {}
         def _hid(h: DataHandle) -> int:
             return handle_ids.setdefault(h, len(handle_ids))
-        for s, _fn, _il, _ol, aux_names in parts:
+        for s, _fn, il, ol, aux_names in parts:
             static_parts.append((
                 f"{type(s).__module__}.{type(s).__qualname__}",
                 s._static_key(),
                 (_hid(s.in_handle), _hid(s.out_handle)),
+                # per-stage layouts: intermediate edges with equal arena
+                # sizes but different shapes must not share one executable
+                (il, ol),
             ))
             aux_handles += [s.aux_handles[n] for n in aux_names]
         in_layout = app.getData(first_in).layout or app.getData(first_in).plan()
@@ -465,7 +653,9 @@ class ProcessChain(Process):
         self._compiled = aot_compile(
             la.fn, specs, tag=la.tag,
             donate_argnums=(0,) if la.in_place else (),
-            static_key=la.static_key, mesh=self.getApp().mesh,
+            static_key=(la.static_key,
+                        _layout_fingerprint(self.getApp(), la)),
+            mesh=self.getApp().mesh,
         )
         self._compiled_in_place = la.in_place
         self._initialized = True

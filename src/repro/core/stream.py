@@ -23,14 +23,26 @@ inference requests):
   is safe by construction).
 
 * :func:`stream_launch` — the engine behind ``Process.stream(datasets,
-  batch=k)``: pack host-side, group into batches (the last batch is padded
-  by repetition so a ragged tail never triggers a second compile), feed
-  through a StreamQueue, launch batched, and scatter the per-item output
-  blobs into fresh output Data objects.
+  batch=k)`` and the Pipeline's ``mode="stream"``: pack host-side, group
+  into batches, feed through a StreamQueue, launch batched, and scatter
+  the per-item output blobs into fresh output Data objects.
+
+* :class:`_BatchPlan` — the ragged-tail policy.  A final batch with fewer
+  than ``batch`` items is either padded by repeating the last item (cheap
+  when the waste is small — no second compile) or, when the padding waste
+  fraction exceeds ``tail_waste_threshold``, executed through a SECOND,
+  smaller executable compiled just for the tail size.  Tail executables go
+  through the same global compile cache, so a recurring tail size (e.g. a
+  serving loop that often flushes half-full batches) compiles once.  Under
+  ``sharded=True`` a tail that does not divide the ``data``-axis size
+  falls back to padding (every device must get whole items).
 
 Results are bit-identical to sequential ``launch()`` — the vmapped program
 runs the same per-item computation, only batched (verified in
-tests/test_stream.py and benchmarks/stream_throughput.py).
+tests/test_stream.py, tests/test_pipeline.py and
+benchmarks/stream_throughput.py).  The serving loop
+(:mod:`repro.serve.pipeline`) builds on the same pieces: StreamQueue as the
+admission buffer, _BatchPlan for dynamic batch sizes.
 
 Sharded streaming contract (``Process.stream(..., sharded=True)``)
 ------------------------------------------------------------------
@@ -72,7 +84,8 @@ import numpy as np
 
 from .arena import batched_spec, split_batched_blob, stack_host_blobs
 from .data import Data
-from .process import PureLaunchable, ProfileParameters, aot_compile
+from .process import (PureLaunchable, ProfileParameters, aot_compile,
+                      _layout_fingerprint)
 from .sync import Coherence
 
 
@@ -223,7 +236,7 @@ class BatchedProcess:
             batched, specs,
             tag=f"{la.tag}@vmap",
             donate_argnums=(0,) if la.in_place else (),
-            static_key=la.static_key,
+            static_key=(la.static_key, _layout_fingerprint(app, la)),
             mesh=app.mesh,
             in_shardings=in_shardings,
             out_shardings=out_shardings,
@@ -240,6 +253,63 @@ class BatchedProcess:
         return self._compiled(stacked_blob, *aux_blobs)
 
 
+class _BatchPlan:
+    """Main batch executable + ragged-tail policy (see module docstring).
+
+    ``launch_rows(rows)`` decides how many rows the final stacked blob
+    should carry: the full ``batch`` (pad by repetition) or exactly
+    ``rows`` (compile a second, smaller executable).  ``executable(rows)``
+    returns the matching :class:`BatchedProcess`; tail executables are
+    built lazily and cached per size (backed by the global compile cache).
+    """
+
+    def __init__(self, process, batch: int, *, sharded: bool = False,
+                 tail_waste_threshold: float = 0.5):
+        self.process = process
+        self.batch = batch
+        self.sharded = sharded
+        self.tail_waste_threshold = float(tail_waste_threshold)
+        self.main = BatchedProcess(process, batch, sharded=sharded)
+        self._tails: dict = {}
+
+    def init(self) -> "_BatchPlan":
+        self.main.init()
+        return self
+
+    @property
+    def launchable(self) -> PureLaunchable:
+        return self.main.launchable
+
+    @property
+    def batch_sharding(self):
+        return self.main.batch_sharding
+
+    def _data_axis(self) -> int:
+        mesh = self.process.getApp().mesh
+        return int(mesh.shape.get("data", 1)) if mesh is not None else 1
+
+    def launch_rows(self, rows: int) -> int:
+        """Rows the stacked blob for a ``rows``-item group should carry."""
+        if rows >= self.batch or rows < 1:
+            return self.batch
+        waste = (self.batch - rows) / self.batch
+        if waste <= self.tail_waste_threshold:
+            return self.batch                      # cheap enough: pad
+        if self.sharded and rows % self._data_axis() != 0:
+            return self.batch                      # devices need whole items
+        return rows                                # compile a tail executable
+
+    def executable(self, rows: int) -> BatchedProcess:
+        if rows == self.batch:
+            return self.main
+        bp = self._tails.get(rows)
+        if bp is None:
+            bp = BatchedProcess(self.process, rows,
+                                sharded=self.sharded).init()
+            self._tails[rows] = bp
+        return bp
+
+
 def _host_blob_of(data: Data) -> np.ndarray:
     """Authoritative host blob of one input Data (syncing device→host first
     if only the device copy is fresh)."""
@@ -251,9 +321,11 @@ def _host_blob_of(data: Data) -> np.ndarray:
 
 
 def _batched_host_blobs(datasets: Sequence[Data], layout,
-                        batch: int) -> Iterator[np.ndarray]:
-    """Yield (batch, nbytes) stacked host blobs; the ragged tail is padded
-    by repeating the last item (padded outputs are dropped downstream)."""
+                        plan: _BatchPlan) -> Iterator[np.ndarray]:
+    """Yield stacked host blobs of ``plan.batch`` rows each; the ragged
+    tail carries ``plan.launch_rows(r)`` rows — padded by repeating the
+    last item, or left at its true size for a tail executable (padded
+    outputs are dropped downstream either way)."""
     group: List[np.ndarray] = []
     for d in datasets:
         if d.layout is None:
@@ -263,31 +335,20 @@ def _batched_host_blobs(datasets: Sequence[Data], layout,
                 f"dataset layout {d.layout} does not match the wired input "
                 f"layout {layout}; all streamed Data sets must be homogeneous")
         group.append(_host_blob_of(d))
-        if len(group) == batch:
+        if len(group) == plan.batch:
             yield stack_host_blobs(group, layout)
             group = []
     if group:
-        group += [group[-1]] * (batch - len(group))
+        rows = plan.launch_rows(len(group))
+        group += [group[-1]] * (rows - len(group))
         yield stack_host_blobs(group, layout)
 
 
-def stream_launch(process, datasets: Sequence[Data], *, batch: int = 1,
-                  depth: int = 2, sync: bool = False, sharded: bool = False,
-                  profile: ProfileParameters | None = None) -> List[Data]:
-    """Run ``datasets`` through ``process`` batched + double-buffered.
-
-    See :meth:`repro.core.process.Process.stream` for the public contract
-    and the module docstring for the ``sharded=True`` placement contract.
-    """
-    datasets = list(datasets)
-    if not datasets:
-        return []
-    app = process.getApp()
-    bp = BatchedProcess(process, batch, sharded=sharded).init()
-    la = bp.launchable
-
+def _prepare_aux(app, la: PureLaunchable, sharded: bool) -> List[jax.Array]:
+    """Device aux blobs in positional order, replicated over the mesh when
+    sharded.  Shared by stream_launch and the serving loop."""
     replicated = app.data_sharding() if sharded else None
-    aux_blobs = []
+    aux_blobs: List[jax.Array] = []
     for h in la.aux_handles:
         d = app.getData(h)
         if d.device_blob is None:
@@ -304,12 +365,41 @@ def stream_launch(process, datasets: Sequence[Data], *, batch: int = 1,
             # calls (compiled for single-device inputs) still match.
             blob = jax.device_put(blob, replicated)
         aux_blobs.append(blob)
+    return aux_blobs
 
-    queue = StreamQueue(_batched_host_blobs(datasets, la.in_layout, batch),
-                        device=bp.batch_sharding or app.device, depth=depth)
+
+def stream_launch(process, datasets: Sequence[Data], *, batch: int = 1,
+                  depth: int = 2, sync: bool = False, sharded: bool = False,
+                  tail_waste_threshold: float = 0.5,
+                  profile: ProfileParameters | None = None) -> List[Data]:
+    """Run ``datasets`` through ``process`` batched + double-buffered.
+
+    See :meth:`repro.core.process.Process.stream` for the public contract,
+    the module docstring for the ``sharded=True`` placement contract and
+    the ragged-tail policy (``tail_waste_threshold``).
+    """
+    datasets = list(datasets)
+    if not datasets:
+        return []
+    app = process.getApp()
+    plan = _BatchPlan(process, batch, sharded=sharded,
+                      tail_waste_threshold=tail_waste_threshold).init()
+    la = plan.launchable
+
+    aux_blobs = _prepare_aux(app, la, sharded)
+
+    tail = len(datasets) % batch
+    if tail:
+        # compile the tail executable (if the policy wants one) BEFORE the
+        # launch loop, so compilation never stalls the double buffer
+        plan.executable(plan.launch_rows(tail))
+
+    queue = StreamQueue(_batched_host_blobs(datasets, la.in_layout, plan),
+                        device=plan.batch_sharding or app.device, depth=depth)
     t0 = time.perf_counter()
     out_batches: List[jax.Array] = []
     for dev_batch in queue:           # batch i+1 transfers while i computes
+        bp = plan.executable(int(dev_batch.shape[0]))
         out_batches.append(bp(dev_batch, aux_blobs))
     # settle the aux uploads' coherence bookkeeping: by now every launch has
     # consumed the aux blobs, so this only waits on the transfers themselves

@@ -6,7 +6,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core.process import Process
+from repro.core.process import Port, Process
 from repro.kernels import ref as kref
 
 
@@ -19,6 +19,10 @@ class XImageSum(Process):
     """(F, C, H, W) -> (F, H, W): sum the per-coil x-images."""
 
     kernel_names = ("coil_combine",)
+
+    ports = {"in": Port(names=("kdata",), ndim=4,
+                        doc="(frames, coils, H, W) per-coil x-images"),
+             "out": Port(names=("xdata",))}
 
     def apply(self, views, aux, params):
         params = params or CombineParams()
@@ -34,6 +38,10 @@ class RSSCombine(Process):
     """(F, C, H, W) -> (F, H, W) f32: root-sum-of-squares combination."""
 
     kernel_names = ("coil_combine",)
+
+    ports = {"in": Port(names=("kdata",), ndim=4,
+                        doc="(frames, coils, H, W) per-coil images"),
+             "out": Port(names=("xdata",))}
 
     def apply(self, views, aux, params):
         params = params or CombineParams()

@@ -4,8 +4,10 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
+
 from repro.core.app import DataHandle
-from repro.core.process import Process
+from repro.core.process import Port, Process
 from repro.kernels import ref as kref
 
 
@@ -23,6 +25,13 @@ class ComplexElementProd(Process):
     (or from an aux Data handle named 'smaps')."""
 
     kernel_names = ("complex_elementprod",)
+
+    ports = {"in": Port(names=("kdata",), dtype=jnp.complexfloating,
+                        doc="K-/X-space set; needs 'sensitivity_maps' too "
+                            "unless the 'smaps' aux port is bound"),
+             "out": Port(names=("kdata",)),
+             "smaps": Port(aux=True, optional=True,
+                           doc="sensitivity maps as a separate Data")}
 
     def apply(self, views, aux, params):
         params = params or conjugate

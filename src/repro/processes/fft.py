@@ -11,7 +11,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core.process import Process
+from repro.core.process import Port, Process
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +27,10 @@ BACKWARD = FFTParams("backward")
 
 class FFT(Process):
     """2-D (I)FFT over the trailing two axes of every complex NDArray."""
+
+    ports = {"in": Port(doc="any Data; complex arrays of ndim>=2 are "
+                            "transformed, everything else passes through"),
+             "out": Port()}
 
     def apply(self, views, aux, params):
         params = params or BACKWARD

@@ -5,7 +5,7 @@ import dataclasses
 
 import jax.numpy as jnp
 
-from repro.core.process import Process
+from repro.core.process import Port, Process
 from repro.kernels import ref as kref
 
 
@@ -18,6 +18,9 @@ class Negate(Process):
     """``output[i] = 1.0 - input[i]`` on every NDArray of the Data set."""
 
     kernel_names = ("negate",)  # module name under repro.kernels
+
+    ports = {"in": Port(doc="any Data; every NDArray is negated"),
+             "out": Port()}
 
     def apply(self, views, aux, params):
         params = params or NegateParams()

@@ -2,10 +2,27 @@
 
 A ProcessChain of FFT(BACKWARD, in-place) -> ComplexElementProd(conjugate,
 in-place) -> XImageSum, mirroring the paper's subprocess structure; zero
-copies between stages (stage outputs ARE stage inputs, donated)."""
+copies between stages (stage outputs ARE stage inputs, donated).
+
+The same reconstruction expressed declaratively (see docs/pipeline.md)::
+
+    pipe = (Pipeline(app)
+            | FFT(app).bind(params=FFTParams("backward", var="kdata"))
+            | ComplexElementProd(app)
+            | XImageSum(app))
+    image = pipe.run(kdata)
+
+SimpleMRIRecon itself is also a valid single Pipeline node (it declares
+ports, infers its output spec, and lowers to its chain's launchable), so
+``Pipeline(app) | SimpleMRIRecon(app)`` streams and serves too.
+"""
 from __future__ import annotations
 
-from repro.core.process import Process, ProcessChain, ProfileParameters
+import jax
+import jax.numpy as jnp
+
+from repro.core.process import (Port, Process, ProcessChain,
+                                ProfileParameters, PureLaunchable)
 from .complex_elementprod import ComplexElementProd, ComplexElementProdParams
 from .coil_combine import XImageSum, CombineParams
 from .fft import FFT, FFTParams
@@ -17,6 +34,13 @@ class SimpleMRIRecon(Process):
     scratch KData handle so the input survives repeated launches (the
     throughput-benchmark configuration)."""
 
+    ports = {"in": Port(names=("kdata", "sensitivity_maps"),
+                        dtype=jnp.complexfloating,
+                        doc="multicoil K-space: kdata (F, C, H, W) + "
+                            "sensitivity_maps (C, H, W)"),
+             "out": Port(names=("xdata",),
+                         doc="reconstructed x-images (F, H, W)")}
+
     def __init__(self, app=None, mode: str = "staged", use_pallas: bool = False,
                  in_place: bool = True):
         super().__init__(app)
@@ -25,6 +49,11 @@ class SimpleMRIRecon(Process):
         self.in_place = in_place
         self.chain: ProcessChain | None = None
 
+    def out_specs(self, in_specs, aux_specs=None):
+        k = in_specs["kdata"]
+        f, _, h, w = k.shape
+        return {"xdata": jax.ShapeDtypeStruct((f, h, w), k.dtype)}
+
     def init(self) -> None:
         app = self.getApp()
         if self.in_place:
@@ -32,25 +61,35 @@ class SimpleMRIRecon(Process):
         else:
             work = app.addData(app.getData(self.in_handle).spec_clone())
 
+        # internal wiring goes straight to the handle attributes — the
+        # public setters are deprecation shims for USER code
         p_ifft = FFT(app)
-        p_ifft.set_in_handle(self.in_handle)
-        p_ifft.set_out_handle(work)
+        p_ifft.in_handle = self.in_handle
+        p_ifft.out_handle = work
         p_ifft.set_launch_parameters(FFTParams("backward", var="kdata"))
 
         p_prod = ComplexElementProd(app)
-        p_prod.set_in_handle(work)
-        p_prod.set_out_handle(work)                  # in place on scratch
+        p_prod.in_handle = work
+        p_prod.out_handle = work                     # in place on scratch
         p_prod.set_launch_parameters(
             ComplexElementProdParams(conjugate=True, use_pallas=self.use_pallas))
 
         p_sum = XImageSum(app)
-        p_sum.set_in_handle(work)
-        p_sum.set_out_handle(self.out_handle)
+        p_sum.in_handle = work
+        p_sum.out_handle = self.out_handle
         p_sum.set_launch_parameters(CombineParams(use_pallas=self.use_pallas))
 
         self.chain = ProcessChain(app, [p_ifft, p_prod, p_sum], mode=self.mode)
         self.chain.init()
         self._initialized = True
+
+    def launchable(self) -> PureLaunchable:
+        """Lower to the chain's fused launchable so the batched/streaming
+        executor and the serving loop can treat the whole reconstruction as
+        one pure program."""
+        if not self._initialized:
+            self.init()
+        return self.chain.launchable()
 
     def launch(self, profile: ProfileParameters | None = None) -> None:
         if not self._initialized:

@@ -1,3 +1,5 @@
 from .engine import ServeEngine, SamplingConfig, make_decode_fn, make_prefill_fn
+from .pipeline import PipelineServer, ServeResponse
 
-__all__ = ["SamplingConfig", "ServeEngine", "make_decode_fn", "make_prefill_fn"]
+__all__ = ["PipelineServer", "SamplingConfig", "ServeEngine",
+           "ServeResponse", "make_decode_fn", "make_prefill_fn"]

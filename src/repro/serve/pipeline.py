@@ -1,0 +1,190 @@
+"""Request/response serving loop over a built operator Pipeline.
+
+This is the ROADMAP's serve-engine integration for Data-set workloads
+(MRI reconstructions, image operators): wrap the sharded streaming
+executor in a request/response loop —
+
+    admission queue  ->  dynamic batcher  ->  batched (sharded) launches
+
+* **Admission** — ``submit()`` packs the request's Data into its host
+  arena blob immediately (validating the layout against the pipeline's
+  input edge) and appends it to a pending deque.
+* **Dynamic batching** — ``drain()`` groups whatever is pending into
+  stacked blobs of up to ``batch`` rows.  Partially-full flushes follow
+  the streaming executor's ragged-tail policy
+  (:class:`repro.core.stream._BatchPlan`): pad by repetition when the
+  waste is small, or run a second executable compiled for the flush size
+  — both results are bit-identical to full batches.  Requests submitted
+  while a drain is in progress are picked up by the same drain.
+* **Transfer/compute overlap** — the stacked blobs feed a
+  :class:`repro.core.stream.StreamQueue` (the admission buffer per the
+  ROADMAP): batch *i+1* is in flight to the device — sharded across the
+  mesh's ``data`` axis when ``sharded=True`` — while batch *i* computes.
+
+Each response carries its request id and wall-clock latency from
+``submit()`` to result-ready, which is what ``benchmarks/serve_latency.py``
+aggregates into p50/p99.  Responses are produced in launch order; callers
+that need submit order sort by ``rid`` (``Pipeline.run(mode="serve")``
+does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, List, Optional
+
+import jax
+
+from repro.core.data import Data
+from repro.core.process import PortError
+from repro.core.stream import (StreamQueue, _BatchPlan, _host_blob_of,
+                               _prepare_aux)
+from repro.core.arena import split_batched_blob, stack_host_blobs
+from repro.core.sync import Coherence
+
+
+@dataclasses.dataclass
+class ServeResponse:
+    """One served result: the output Data plus latency accounting."""
+
+    rid: int
+    data: Data
+    submitted_s: float          # perf_counter at submit()
+    completed_s: float          # perf_counter when the result was ready
+
+    @property
+    def latency_s(self) -> float:
+        return self.completed_s - self.submitted_s
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    blob: Any                   # packed host arena blob
+    submitted_s: float
+
+
+class PipelineServer:
+    """Serving front-end for one :class:`repro.core.graph.Pipeline`.
+
+    Usage::
+
+        server = pipe.serve(batch=8, sharded=True)
+        rids = [server.submit(kdata) for kdata in requests]
+        responses = server.drain()          # ServeResponse per request
+
+    The pipeline is built lazily from the first submitted request (or
+    reused if already built); every launch reuses the one AOT-compiled
+    batched program, so serving keeps the paper's per-iteration overhead
+    at zero.
+    """
+
+    def __init__(self, pipeline, *, batch: int = 8, sharded: bool = False,
+                 depth: int = 2, tail_waste_threshold: float = 0.5):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.pipeline = pipeline
+        self.batch = batch
+        self.sharded = sharded
+        self.depth = depth
+        self.tail_waste_threshold = tail_waste_threshold
+        self._pending: Deque[_Request] = deque()
+        self._next_rid = 0
+        self._plan: Optional[_BatchPlan] = None
+        self._aux_blobs: Optional[List[Any]] = None
+        self.served = 0             # completed requests (introspection)
+        self.launches = 0           # batched launches issued
+
+    # ------------------------------------------------------------ lifecycle
+    def _ensure_built(self, data: Data) -> None:
+        if self._plan is not None:
+            return
+        built = self.pipeline.build(data)
+        self._plan = _BatchPlan(
+            built.executor, self.batch, sharded=self.sharded,
+            tail_waste_threshold=self.tail_waste_threshold).init()
+        # aux wiring is fixed for the server's lifetime: prepare (and, when
+        # sharded, mesh-replicate) the aux blobs ONCE, not per drain
+        app = built.executor.getApp()
+        self._aux_blobs = _prepare_aux(app, self._plan.launchable,
+                                       self.sharded)
+        app.wait_transfers(self._plan.launchable.aux_handles)
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # ------------------------------------------------------------ admission
+    def submit(self, data: Data) -> int:
+        """Admit one request: validate, pack to a host arena blob, queue.
+        Returns the request id used to match the response."""
+        self._ensure_built(data)
+        la = self._plan.launchable
+        if data.layout is None:
+            data.plan()
+        if data.layout != la.in_layout:
+            raise PortError(
+                f"request layout {data.layout} does not match the "
+                f"pipeline's input layout {la.in_layout}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(
+            _Request(rid, _host_blob_of(data), time.perf_counter()))
+        return rid
+
+    # ------------------------------------------------------------- serving
+    def drain(self) -> List[ServeResponse]:
+        """Serve every pending request (including ones admitted while the
+        drain runs); returns responses in completion (launch) order."""
+        if self._plan is None or not self._pending:
+            return []
+        plan = self._plan
+        la = plan.launchable
+        app = plan.process.getApp()
+        aux_blobs = self._aux_blobs
+
+        # compile the expected tail executable BEFORE the launch loop so a
+        # partial flush never stalls serving (nor charges XLA compile time
+        # to the requests' recorded latencies)
+        tail = len(self._pending) % self.batch
+        if tail:
+            plan.executable(plan.launch_rows(tail))
+
+        groups: Deque[List[_Request]] = deque()
+
+        def stacked_batches():
+            # dynamic batcher: whatever is pending right now, up to `batch`
+            # rows per launch; the parallel `groups` deque carries the
+            # request bookkeeping in the same order the queue yields blobs
+            while self._pending:
+                group: List[_Request] = []
+                while self._pending and len(group) < self.batch:
+                    group.append(self._pending.popleft())
+                rows = plan.launch_rows(len(group))
+                blobs = [r.blob for r in group]
+                blobs += [blobs[-1]] * (rows - len(blobs))
+                groups.append(group)
+                yield stack_host_blobs(blobs, la.in_layout)
+
+        queue = StreamQueue(stacked_batches(),
+                            device=plan.batch_sharding or app.device,
+                            depth=self.depth)
+        responses: List[ServeResponse] = []
+        for dev_batch in queue:       # next flush transfers while this runs
+            out = plan.executable(int(dev_batch.shape[0]))(dev_batch,
+                                                           aux_blobs)
+            jax.block_until_ready(out)      # latency = result actually ready
+            t_done = time.perf_counter()
+            group = groups.popleft()
+            per_item = split_batched_blob(out)[:len(group)]
+            self.launches += 1
+            for req, blob in zip(group, per_item):
+                d = Data.from_layout(la.out_layout)
+                d.device_blob = blob
+                d.coherence = Coherence.DEVICE_FRESH
+                responses.append(ServeResponse(
+                    rid=req.rid, data=d, submitted_s=req.submitted_s,
+                    completed_s=t_done))
+        self.served += len(responses)
+        return responses

@@ -48,7 +48,7 @@ def test_init_launch_split_and_overhead(app, rng):
     prof = ProfileParameters(enable=True)
     for _ in range(20):
         p.launch(prof)
-    assert prof.mean < t_init, "launch must be cheaper than init (plan baking)"
+    assert prof.mean() < t_init, "launch must be cheaper than init (plan baking)"
     app.device2Host(h_out)
     np.testing.assert_allclose(d_out.get_ndarray(0).host,
                                d_in.get_ndarray(0).host + 2.5, rtol=1e-6)

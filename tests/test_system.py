@@ -94,7 +94,7 @@ def test_process_launch_overhead_is_small(app):
     for _ in range(5):
         app.host2device(h_in)   # re-stream input (blob donated in-place)
         proc.launch(prof)
-    assert prof.mean < t_init, "launch must be much cheaper than init"
+    assert prof.mean() < t_init, "launch must be much cheaper than init"
 
 
 DRYRUN_SNIPPET = r"""
