@@ -1,0 +1,147 @@
+"""Fan-in join throughput: streamed second input vs legacy aux broadcast.
+
+The same reconstruction graph (FFT -> ComplexElementProd -> XImageSum)
+wired two ways:
+
+* **aux** — sensitivity maps bound as static concrete Data, broadcast
+  across every batch (the pre-join path: one input edge, maps never
+  re-transferred);
+* **join** — sensitivity maps streamed as a SECOND input edge, one maps
+  Data per item, per-edge batch queues zipped into a joined launch (the
+  fan-in path: maps may differ per item — e.g. per-slice coil maps).
+
+Both run ``mode="stream"`` over N items at batch 1 / 4 / 8 and are
+verified bit-identical per item first.  The join pays one extra
+host->device stream (the maps edge); the interesting number is how small
+that overhead is relative to the aux path — per-edge double buffering
+hides most of it.
+
+Prints the harness CSV rows plus one ``BENCH {json}`` line, and writes
+``BENCH_fanin_throughput.json`` next to this file for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+import jax
+
+from repro.core import CLapp, Data, Pipeline
+from repro.processes import FFT, ComplexElementProd, XImageSum
+from repro.processes.coil_combine import CombineParams
+from repro.processes.complex_elementprod import ComplexElementProdParams
+from repro.processes.fft import FFTParams
+
+FRAMES, COILS, H, W = 4, 4, 64, 64
+N_ITEMS = 24
+BATCHES = (1, 4, 8)
+REPS = 3   # timed streams per config; stats over the best rep
+
+
+def _smaps() -> np.ndarray:
+    rng = np.random.default_rng(1)
+    return (rng.standard_normal((COILS, H, W))
+            + 1j * rng.standard_normal((COILS, H, W))).astype(np.complex64)
+
+
+def _kspace(n: int) -> List[Data]:
+    out = []
+    for i in range(n):
+        r = np.random.default_rng(400 + i)
+        k = (r.standard_normal((FRAMES, COILS, H, W))
+             + 1j * r.standard_normal((FRAMES, COILS, H, W))).astype(np.complex64)
+        out.append(Data({"kdata": k}))
+    return out
+
+
+def _aux_pipeline(app: CLapp, smaps: np.ndarray) -> Pipeline:
+    return (Pipeline(app)
+            | FFT(app).bind(infile="kspace", outfile="xspace",
+                            params=FFTParams("backward", var="kdata"))
+            | ComplexElementProd(app).bind(
+                smaps=Data({"sensitivity_maps": smaps}),
+                params=ComplexElementProdParams(conjugate=True))
+            | XImageSum(app).bind(params=CombineParams()))
+
+
+def _join_pipeline(app: CLapp) -> Pipeline:
+    fft = FFT(app).bind(infile="kspace", outfile="xspace",
+                        params=FFTParams("backward", var="kdata"))
+    prod = ComplexElementProd(app).bind(
+        infile="xspace", outfile="weighted", smaps="smaps",
+        params=ComplexElementProdParams(conjugate=True))
+    comb = XImageSum(app).bind(infile="weighted", outfile="image",
+                               params=CombineParams())
+    return Pipeline.from_graph(app, [fft, prod, comb], output="image")
+
+
+def _time_stream(pipe: Pipeline, items, batch: int) -> float:
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        outs = pipe.run(items, mode="stream", batch=batch, sync=False)
+        jax.block_until_ready([o.device_blob for o in outs])
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def rows() -> List[str]:
+    app = CLapp().init()
+    smaps = _smaps()
+    kspace = _kspace(N_ITEMS)
+    join_items = [{"kspace": k,
+                   "smaps": Data({"sensitivity_maps": smaps.copy()})}
+                  for k in kspace]
+    aux_pipe = _aux_pipeline(app, smaps)
+    join_pipe = _join_pipeline(app)
+
+    # bit-identity gate before timing anything
+    want = aux_pipe.run(kspace, mode="stream", batch=4)
+    got = join_pipe.run(join_items, mode="stream", batch=4)
+    for i in range(N_ITEMS):
+        np.testing.assert_array_equal(
+            got[i].get_ndarray(0).host, want[i].get_ndarray(0).host,
+            err_msg=f"join vs aux mismatch at item {i}")
+
+    out_rows: List[str] = []
+    results = []
+    for batch in BATCHES:
+        # warm up the batched (and tail) executables outside the timing
+        aux_pipe.run(kspace, mode="stream", batch=batch, sync=False)
+        join_pipe.run(join_items, mode="stream", batch=batch, sync=False)
+        t_aux = _time_stream(aux_pipe, kspace, batch)
+        t_join = _time_stream(join_pipe, join_items, batch)
+        aux_ips = N_ITEMS / max(t_aux, 1e-12)
+        join_ips = N_ITEMS / max(t_join, 1e-12)
+        results.append({
+            "batch": batch,
+            "aux_items_per_s": round(aux_ips, 2),
+            "join_items_per_s": round(join_ips, 2),
+            "join_over_aux": round(join_ips / max(aux_ips, 1e-12), 4),
+        })
+        out_rows.append(
+            f"fanin_throughput_b{batch},{t_join / N_ITEMS * 1e6:.1f},"
+            f"aux_items_per_s={aux_ips:.1f};join_items_per_s={join_ips:.1f};"
+            f"join_over_aux={join_ips / max(aux_ips, 1e-12):.3f}")
+    bench = {
+        "name": "fanin_throughput",
+        "n_items": N_ITEMS,
+        "shape": [FRAMES, COILS, H, W],
+        "results": results,
+    }
+    print("BENCH " + json.dumps(bench))
+    out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_fanin_throughput.json")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    return out_rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in rows():
+        print(r)

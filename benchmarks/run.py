@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm stream mesh serve]
+    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm stream mesh serve fanin]
 """
 from __future__ import annotations
 
@@ -11,7 +11,7 @@ import sys
 
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "fig2", "overhead", "roofline",
-                                  "lm", "stream", "mesh", "serve"}
+                                  "lm", "stream", "mesh", "serve", "fanin"}
     print("name,us_per_call,derived")
     rows = []
     if "table1" in which:
@@ -38,6 +38,9 @@ def main() -> None:
     if "serve" in which:
         from benchmarks.serve_latency import rows as serve_rows
         rows += serve_rows()
+    if "fanin" in which:
+        from benchmarks.fanin_throughput import rows as fanin_rows
+        rows += fanin_rows()
     for r in rows:
         print(r)
 

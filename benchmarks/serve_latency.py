@@ -10,6 +10,15 @@ operator graph and drains them at max-batch 1 / 4 / 8:
   the dynamic-batching curve a serving deployment tunes).
 * **throughput** — requests per second over the whole drain.
 
+A second scenario measures the **flush_timeout** policy (serving
+hardening, ROADMAP): requests TRICKLE in (fixed inter-arrival gap) at
+max-batch 8.  Without a timeout the batcher would sit on a partial batch
+until a manual drain after the last arrival — early requests pay the
+whole accumulation window; with ``flush_timeout`` the background drain
+thread flushes a partial batch once its oldest request has waited the
+timeout, capping the queueing term of p50/p99.  Both variants are
+reported so the p50/p99 impact is explicit.
+
 Prints the harness CSV rows plus one ``BENCH {json}`` line, and writes
 ``BENCH_serve_latency.json`` next to this file for the perf trajectory.
 """
@@ -32,6 +41,11 @@ FRAMES, COILS, H, W = 4, 4, 64, 64
 N_REQUESTS = 24
 BATCHES = (1, 4, 8)
 REPS = 3   # drains per batch size; stats over the best drain (min p50)
+
+# flush-timeout scenario: a trickle of requests into a batch-8 server
+TRICKLE_N = 12
+TRICKLE_GAP_S = 0.004        # inter-arrival gap
+FLUSH_TIMEOUT_S = 0.010
 
 
 def _requests(n: int) -> List[KData]:
@@ -88,11 +102,58 @@ def rows() -> List[str]:
             f"serve_latency_b{batch},{best['p50_ms'] * 1e3:.1f},"
             f"p99_ms={best['p99_ms']:.2f};"
             f"throughput_rps={best['throughput_rps']:.1f}")
+    # ---- flush_timeout impact: trickle arrivals, partial-batch flushes ----
+    def trickle(flush_timeout):
+        server = pipe.serve(batch=8, flush_timeout=flush_timeout)
+        server.submit(requests[0])
+        if flush_timeout is None:
+            server.drain()                       # warm the batched compiles
+        else:
+            server.collect(1, timeout=60.0)
+        # equal compile-warmth for both policies: pre-compile EVERY
+        # partial-flush size so timing-dependent group sizes under
+        # flush_timeout never compile inside a timed rep
+        server.warmup()
+        lats = []
+        for _ in range(REPS):
+            rids = []
+            for r in requests[:TRICKLE_N]:
+                rids.append(server.submit(r))
+                time.sleep(TRICKLE_GAP_S)
+            if flush_timeout is None:
+                responses = server.drain()       # manual flush at the end
+            else:
+                responses = server.collect(len(rids), timeout=60.0)
+            assert len(responses) == len(rids)
+            lats.append(np.asarray(sorted(r.latency_s for r in responses)))
+        server.close()
+        best = min(lats, key=lambda a: float(np.percentile(a, 50)))
+        return {"p50_ms": float(np.percentile(best, 50) * 1e3),
+                "p99_ms": float(np.percentile(best, 99) * 1e3)}
+
+    flush_results = []
+    for label, timeout in (("no_flush_timeout", None),
+                           (f"flush_{FLUSH_TIMEOUT_S * 1e3:.0f}ms",
+                            FLUSH_TIMEOUT_S)):
+        stats = trickle(timeout)
+        flush_results.append({"policy": label,
+                              **{k: round(v, 3) for k, v in stats.items()}})
+        out_rows.append(
+            f"serve_trickle_{label},{stats['p50_ms'] * 1e3:.1f},"
+            f"p99_ms={stats['p99_ms']:.2f}")
+
     bench = {
         "name": "serve_latency",
         "n_requests": N_REQUESTS,
         "shape": [FRAMES, COILS, H, W],
         "results": results,
+        "flush_timeout": {
+            "trickle_n": TRICKLE_N,
+            "gap_ms": TRICKLE_GAP_S * 1e3,
+            "flush_timeout_ms": FLUSH_TIMEOUT_S * 1e3,
+            "batch": 8,
+            "results": flush_results,
+        },
     }
     print("BENCH " + json.dumps(bench))
     out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),

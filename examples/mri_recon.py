@@ -28,8 +28,16 @@ execution modes of the unified front-end — ``pipe.run(kdata)``,
 mode="serve", batch=k)`` — each verified bit-identical to the legacy
 imperative launch above.
 
+``--join`` demonstrates a true fan-in pipeline: the sensitivity maps are
+STREAMED as a second input edge (``ComplexElementProd.bind(smaps=
+"smaps")`` + ``Pipeline.from_graph``) instead of riding in the KData
+arena or being broadcast as a static aux — each item is a ``{"kspace":
+..., "smaps": ...}`` mapping, both edges batched row-aligned and joined
+in one launch.  The joined outputs are asserted bit-identical to the
+``--pipeline`` graph in every mode.
+
 Run:  PYTHONPATH=src python examples/mri_recon.py [--fused] [--pallas]
-                      [--stream N] [--batch K] [--sharded] [--pipeline]
+          [--stream N] [--batch K] [--sharded] [--pipeline] [--join]
 """
 import sys
 import time
@@ -37,8 +45,9 @@ import time
 import numpy as np
 
 from repro.configs.mri_recon import CONFIG
-from repro.core import (CLapp, DeviceTraits, DeviceType, KData, Pipeline,
-                        PlatformTraits, ProfileParameters, SyncSource, XData)
+from repro.core import (CLapp, Data, DeviceTraits, DeviceType, KData,
+                        Pipeline, PlatformTraits, ProfileParameters,
+                        SyncSource, XData)
 from repro.processes import (FFT, ComplexElementProd, SimpleMRIRecon,
                              XImageSum)
 from repro.processes.coil_combine import CombineParams
@@ -173,6 +182,90 @@ def pipeline_demo(app, cfg, reference: np.ndarray, exact: bool = True) -> None:
           f"p99 {prof.p99() * 1e3:.1f} ms")
 
 
+def join_demo(app, cfg, reference: np.ndarray, exact: bool = True) -> None:
+    """Fan-in: the maps stream as a second input edge (a real join) and the
+    result is bit-identical to the single-arena ``--pipeline`` graph."""
+    kdata, smaps, _ = synthetic_kdata(cfg.frames, cfg.coils, cfg.height,
+                                      cfg.width)
+    # the single-input reference graph (smaps inside the KData arena)
+    arena_pipe = (Pipeline(app)
+                  | FFT(app).bind(infile="kspace", outfile="xspace",
+                                  params=FFTParams("backward", var="kdata"))
+                  | ComplexElementProd(app).bind(
+                      params=ComplexElementProdParams(conjugate=True))
+                  | XImageSum(app).bind(params=CombineParams()))
+    # the fan-in graph: kspace stream ⋈ smaps stream
+    fft = FFT(app).bind(infile="kspace", outfile="xspace",
+                        params=FFTParams("backward", var="kdata"))
+    prod = ComplexElementProd(app).bind(
+        infile="xspace", outfile="weighted", smaps="smaps",
+        params=ComplexElementProdParams(conjugate=True))
+    comb = XImageSum(app).bind(infile="weighted", outfile="image",
+                               params=CombineParams())
+    join_pipe = Pipeline.from_graph(app, [fft, prod, comb], output="image")
+    print(f"[join] input edges: {list(join_pipe.input_edges)}")
+
+    out = join_pipe.run({"kspace": Data({"kdata": kdata}),
+                         "smaps": Data({"sensitivity_maps": smaps})})
+    got = out.get_ndarray(0).host
+    if exact:
+        assert np.array_equal(got, reference), \
+            "joined launch must be bit-identical to the --pipeline output"
+        print("[join] launch bit-identical to the single-arena pipeline")
+    else:
+        np.testing.assert_allclose(got, reference, rtol=1e-4, atol=1e-4)
+        print("[join] launch matches the fused/pallas reference numerically")
+
+    # shared maps: the joined stream must be BIT-identical to the same
+    # port bound as a static aux broadcast (the legacy batched path)
+    aux_pipe = (Pipeline(app)
+                | FFT(app).bind(infile="kspace", outfile="xspace",
+                                params=FFTParams("backward", var="kdata"))
+                | ComplexElementProd(app).bind(
+                    smaps=Data({"sensitivity_maps": smaps}),
+                    params=ComplexElementProdParams(conjugate=True))
+                | XImageSum(app).bind(params=CombineParams()))
+    kstack = []
+    for s in range(5):                       # 5 at batch 2: ragged tail too
+        k, _, _ = synthetic_kdata(cfg.frames, cfg.coils, cfg.height,
+                                  cfg.width, seed=700 + s)
+        kstack.append(Data({"kdata": k}))
+    shared = [{"kspace": k, "smaps": Data({"sensitivity_maps": smaps.copy()})}
+              for k in kstack]
+    want = aux_pipe.run(kstack, mode="stream", batch=2)
+    got_stream = join_pipe.run(shared, mode="stream", batch=2)
+    prof = ProfileParameters(enable=True)
+    got_serve = join_pipe.run(shared, mode="serve", batch=2, profile=prof)
+    for i in range(len(shared)):
+        assert np.array_equal(got_stream[i].get_ndarray(0).host,
+                              want[i].get_ndarray(0).host), f"stream[{i}]"
+        assert np.array_equal(got_serve[i].get_ndarray(0).host,
+                              want[i].get_ndarray(0).host), f"serve[{i}]"
+    print(f"[join] stream+serve of {len(shared)} slices bit-identical to "
+          "the aux-broadcast binding; "
+          f"serve p50 {prof.p50() * 1e3:.1f} ms / "
+          f"p99 {prof.p99() * 1e3:.1f} ms")
+
+    # per-slice maps: only a join can stream these (a broadcast aux is one
+    # Data for every item); verified against the single-arena graph
+    slices, items = [], []
+    for s in range(4):
+        k, sm, _ = synthetic_kdata(cfg.frames, cfg.coils, cfg.height,
+                                   cfg.width, seed=800 + s)
+        slices.append(KData({"kdata": k, "sensitivity_maps": sm}))
+        items.append({"kspace": Data({"kdata": k}),
+                      "smaps": Data({"sensitivity_maps": sm})})
+    want_arena = arena_pipe.run(slices, mode="stream", batch=2)
+    got_items = join_pipe.run(items, mode="stream", batch=2)
+    for i in range(len(items)):
+        np.testing.assert_allclose(
+            got_items[i].get_ndarray(0).host,
+            want_arena[i].get_ndarray(0).host, rtol=1e-4, atol=1e-4,
+            err_msg=f"per-slice maps item {i}")
+    print(f"[join] {len(items)} PER-SLICE map sets streamed through the "
+          "smaps edge, matching the single-arena graph")
+
+
 def main() -> None:
     mode = "fused" if "--fused" in sys.argv else "staged"
     use_pallas = "--pallas" in sys.argv
@@ -220,6 +313,10 @@ def main() -> None:
     if "--pipeline" in sys.argv:
         pipeline_demo(app, cfg, recon,
                       exact=(mode == "staged" and not use_pallas))
+
+    if "--join" in sys.argv:
+        join_demo(app, cfg, recon,
+                  exact=(mode == "staged" and not use_pallas))
 
     if n_stream:
         stream_slice_stack(app, proc, cfg, n_stream, batch, sharded=sharded)

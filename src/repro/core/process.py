@@ -1,21 +1,32 @@
 """Process — the paper's algorithm abstraction (§III-A.3b, §III-B).
 
 A Process is a mathematical operator: typed input/output **ports**, launch
-parameters, and a pure :meth:`Process.apply`.  There are two ways to wire
-operators to Data, and one engine underneath both:
+parameters, and a pure :meth:`Process.apply`.  A process can have **many
+streaming inputs**, not just one: every non-aux port other than ``"out"``
+is an input port, ordered with the primary ``"in"`` first.  Input ports are
+*streamed* (batched per item in the stream/serve modes, joinable to other
+nodes' output edges in a Pipeline); ``Port(aux=True)`` ports remain
+genuinely static side parameters (bound to concrete Data, broadcast across
+every batch).  There are two ways to wire operators to Data, and one
+engine underneath both:
 
 * **Declarative (preferred)** — a Process declares its contract as typed
   ports (``ports = {"in": Port(...), "out": Port(...), "smaps":
-  Port(aux=True)}``) and is wired *functionally*::
+  Port(optional=True)}``) and is wired *functionally*::
 
       fft  = FFT(app).bind(infile="kspace", outfile="xspace",
                            params=FFTParams("backward", var="kdata"))
-      pipe = Pipeline(app) | fft | elemprod | coil_combine
-      out  = pipe.run(kdata)                       # mode="launch"
-      outs = pipe.run(slices, mode="stream", batch=8, sharded=True)
+      prod = ComplexElementProd(app).bind(infile="xspace",
+                                          smaps="smaps")  # fan-in join
+      pipe = Pipeline.from_graph(app, [fft, prod, coil_combine])
+      out  = pipe.run({"kspace": kd, "smaps": sm})  # mode="launch"
+      outs = pipe.run(items, mode="stream", batch=8, sharded=True)
       outs = pipe.run(requests, mode="serve", batch=8)
 
-  ``bind()`` maps ports to named graph edges (or concrete Data); the
+  ``bind()`` maps ports to named graph edges (or concrete Data); an input
+  port bound to a named edge becomes a true streaming input (a pipeline
+  *join*), while concrete Data on the same port reproduces the legacy
+  static-broadcast behaviour bit-identically.  The
   :class:`~repro.core.graph.Pipeline` shape/dtype-checks the whole graph
   against every port at *bind/build* time — a mis-wired graph is rejected
   with :class:`PortError`/:class:`~repro.core.graph.GraphError` before
@@ -48,12 +59,23 @@ stages are traced as one program, letting XLA fuse across stage boundaries
 :meth:`Process.stream` — many independent Data sets through one compiled
 program, batched via ``vmap`` and double-buffered (see
 :mod:`repro.core.stream`), with ragged-tail batches recompiled small when
-padding would be wasteful.
+padding would be wasteful.  A multi-input process streams *tuples* (or
+``{input name -> Data}`` mappings): every input edge gets its own
+row-aligned batch queue, zipped into one joined launch.
 
-Donation safety: a program compiled in-place (``out_handle == in_handle``)
-donates its input buffer to XLA.  ``launch()`` refuses to run such a
-program after the handles were re-wired to out != in without ``init()``
-(use-after-donate would silently hand the caller's live blob to XLA); see
+The lowered form, :class:`PureLaunchable`, is genuinely multi-input:
+``fn(*in_blobs, *aux_blobs) -> blob_out`` with ordered ``in_names`` /
+``in_layouts`` / ``in_handles`` instead of a privileged primary input —
+the primary ``"in"`` port is simply position 0.  Secondary input views are
+delivered to :meth:`Process.apply` through the same ``aux`` argument slot
+the static-broadcast path uses, which is what makes a streamed join
+bit-identical to the legacy aux binding by construction.
+
+Donation safety: a program compiled in-place (``out_handle`` equal to one
+of its input handles) donates that input buffer to XLA.  ``launch()``
+refuses to run such a program after the handles were re-wired so the
+donated input is no longer the output without ``init()`` (use-after-donate
+would silently hand the caller's live blob to XLA); see
 :class:`DonatedBufferError`.
 """
 from __future__ import annotations
@@ -123,18 +145,23 @@ class Port:
         class ComplexElementProd(Process):
             ports = {"in":    Port(names=("kdata",)),
                      "out":   Port(names=("kdata",)),
-                     "smaps": Port(aux=True, optional=True)}
+                     "smaps": Port(optional=True)}
 
     The reserved port names ``"in"`` and ``"out"`` are the primary input
-    and output; every ``Port(aux=True)`` entry is an aux (side-input) port
-    keyed by its own name.  ``validate()`` checks a candidate Data's specs
-    against the declaration and raises :class:`PortError` on mismatch —
-    this is what lets :class:`~repro.core.graph.Pipeline` reject mis-wired
-    graphs at bind time instead of at launch.
+    and output.  Every other ``Port()`` entry (``aux=False``) is an
+    **additional streaming input** keyed by its own name: it may be bound
+    to a named graph edge (a pipeline join — batched per item in the
+    stream/serve modes) or to concrete Data (static, broadcast — the
+    legacy aux behaviour, bit-identical).  ``Port(aux=True)`` entries are
+    aux-only side parameters: always static, never an edge.  ``validate()``
+    checks a candidate Data's specs against the declaration and raises
+    :class:`PortError` on mismatch — this is what lets
+    :class:`~repro.core.graph.Pipeline` reject mis-wired graphs at bind
+    time instead of at launch.
     """
 
-    aux: bool = False            # side input (broadcast in batched modes)
-    optional: bool = False       # aux only: may stay unbound
+    aux: bool = False            # static side input (broadcast, never an edge)
+    optional: bool = False       # non-primary ports: may stay unbound
     names: Optional[Tuple[str, ...]] = None  # NDArray names the Data must hold
     dtype: Any = None            # required dtype (concrete or abstract kind)
     ndim: Optional[int] = None   # required rank of the checked arrays
@@ -242,7 +269,7 @@ def aot_compile(fn: Callable, specs: Sequence[Any], *, tag: str,
 
 def _layout_fingerprint(app, la: "PureLaunchable") -> Any:
     """Hashable fingerprint of every arena layout a compiled program bakes
-    in (input, output, aux).  Folded into the compile-cache static key:
+    in (inputs, output, aux).  Folded into the compile-cache static key:
     the blob *specs* only carry total byte sizes, and two different
     layouts can round up to the same arena size — without this they would
     collide on one executable that unpacks the wrong shapes."""
@@ -252,34 +279,54 @@ def _layout_fingerprint(app, la: "PureLaunchable") -> Any:
         if d.layout is None:
             d.plan()
         aux_layouts.append(d.layout)
-    return (la.in_layout, la.out_layout, tuple(aux_layouts))
+    return (la.in_layouts, la.out_layout, tuple(aux_layouts))
 
 
 class DonatedBufferError(RuntimeError):
     """A process compiled with input donation (in-place) was launched after
-    its handles were re-wired to out != in.  Running it would donate the
-    caller's live input blob to XLA; call ``init()`` again to recompile for
-    the new wiring."""
+    its handles were re-wired so the donated input no longer doubles as the
+    output.  Running it would donate the caller's live input blob to XLA;
+    call ``init()`` again to recompile for the new wiring."""
 
 
 @dataclasses.dataclass(frozen=True)
 class PureLaunchable:
     """A Process lowered to its pure, launchable form.
 
-    ``fn(blob_in, *aux_blobs) -> blob_out`` plus everything needed to
-    compile and feed it: arena layouts, the aux Data handles in positional
-    order, the compile-cache tag/static key, and whether the program is
-    in-place (input donated).  This is the unit shared by ``init()``
-    (single-shot AOT), fused chains, and the batched/streaming executor.
+    ``fn(*in_blobs, *aux_blobs) -> blob_out`` plus everything needed to
+    compile and feed it: the ordered streaming inputs (names, arena
+    layouts, Data handles — position 0 is the primary ``"in"`` port), the
+    aux Data handles in positional order, the compile-cache tag/static
+    key, and which input (if any) is donated because it doubles as the
+    output.  This is the unit shared by ``init()`` (single-shot AOT),
+    fused chains, and the batched/streaming executor — all of which treat
+    every streaming input symmetrically (per-edge batch queues, zipped
+    row-aligned; see :mod:`repro.core.stream`).
     """
 
     fn: Callable
-    in_layout: ArenaLayout
+    in_names: Tuple[str, ...]
+    in_layouts: Tuple[ArenaLayout, ...]
+    in_handles: Tuple[DataHandle, ...]
     out_layout: ArenaLayout
     aux_handles: Tuple[DataHandle, ...]
     tag: str
     static_key: Any
-    in_place: bool
+    donate_idx: Optional[int]    # input position donated to XLA (None = none)
+
+    @property
+    def n_inputs(self) -> int:
+        return len(self.in_layouts)
+
+    @property
+    def in_layout(self) -> ArenaLayout:
+        """Layout of the primary input (compat accessor)."""
+        return self.in_layouts[0]
+
+    @property
+    def in_place(self) -> bool:
+        """True when some input buffer is donated (out doubles as input)."""
+        return self.donate_idx is not None
 
 
 class Process:
@@ -292,23 +339,56 @@ class Process:
     kernel_names: Sequence[str] = ()
 
     #: typed wiring contract: ``"in"``/``"out"`` are the primary input and
-    #: output; entries with ``Port(aux=True)`` are side inputs keyed by
+    #: output; every other non-aux entry is an additional streaming input;
+    #: entries with ``Port(aux=True)`` are static side parameters keyed by
     #: their own name.  Subclasses override to tighten the contract.
     ports: Dict[str, Port] = {"in": Port(), "out": Port()}
 
     def __init__(self, app: Optional[CLapp] = None):
         self._app = app
-        self.in_handle: DataHandle = INVALID_HANDLE
+        #: ordered wiring of the streaming input ports (``"in"`` first).
+        #: Secondary input ports appear here only when wired as streaming
+        #: inputs; wired via ``aux_handles`` instead they stay static.
+        self.in_handles: Dict[str, DataHandle] = {"in": INVALID_HANDLE}
         self.out_handle: DataHandle = INVALID_HANDLE
         self.aux_handles: Dict[str, DataHandle] = {}
         self.launch_params: Any = None
         self.kernel: Optional[Callable] = None
         self._compiled = None
-        self._compiled_in_place = False
+        self._compiled_in_names: Tuple[str, ...] = ()
+        self._compiled_donate_name: Optional[str] = None
         self._initialized = False
         self._legacy_warned = False
 
     # -- wiring ---------------------------------------------------------------
+    @property
+    def in_handle(self) -> DataHandle:
+        """The primary (``"in"`` port) input handle — position 0 of the
+        multi-input wiring; kept as an attribute-style accessor because the
+        single-input protocol predates multi-input launchables."""
+        return self.in_handles.get("in", INVALID_HANDLE)
+
+    @in_handle.setter
+    def in_handle(self, h: DataHandle) -> None:
+        self.in_handles["in"] = h
+
+    @property
+    def input_names(self) -> Tuple[str, ...]:
+        """The wired streaming inputs in positional order: declared input
+        ports first (declaration order, ``"in"`` always position 0), then
+        any extra wired names in insertion order."""
+        wired = [n for n, h in self.in_handles.items() if h != INVALID_HANDLE]
+        declared = [n for n in self.ports
+                    if n != "out" and not self.ports[n].aux]
+        ordered = [n for n in declared if n in wired]
+        ordered += [n for n in wired if n not in ordered]
+        if "in" in ordered and ordered[0] != "in":
+            ordered.remove("in")
+            ordered.insert(0, "in")
+        if not ordered:
+            ordered = ["in"]        # unwired: fail later with INVALID_HANDLE
+        return tuple(ordered)
+
     def getApp(self) -> CLapp:
         if self._app is None:
             raise RuntimeError("process not bound to a CLapp")
@@ -321,12 +401,16 @@ class Process:
         Pipeline` composition.
 
         ``infile``/``outfile`` bind the ``"in"``/``"out"`` ports; every
-        other keyword binds the same-named aux port.  A binding is either a
-        **named edge** (str) connecting to other nodes in the graph, or a
-        concrete :class:`~repro.core.data.Data` (/registered DataHandle).
-        Concrete bindings are port-validated immediately — a mis-typed Data
-        raises :class:`PortError` here, at bind time.  ``params`` forwards
-        to :meth:`set_launch_parameters`.
+        other keyword binds the same-named secondary input or aux port.  A
+        binding is either a **named edge** (str) connecting to other nodes
+        in the graph, or a concrete :class:`~repro.core.data.Data`
+        (/registered DataHandle).  An *input* port bound to an edge becomes
+        a true streaming input (a fan-in join); bound to concrete Data it
+        is static (broadcast in batched modes — bit-identical results).
+        Aux ports only accept concrete bindings.  Concrete bindings are
+        port-validated immediately — a mis-typed Data raises
+        :class:`PortError` here, at bind time.  ``params`` forwards to
+        :meth:`set_launch_parameters`.
         """
         from .graph import Node  # local import: graph builds on Process
 
@@ -392,12 +476,16 @@ class Process:
         raise NotImplementedError
 
     # -- layouts ---------------------------------------------------------------
-    def _layouts(self) -> Tuple[ArenaLayout, ArenaLayout, Dict[str, ArenaLayout]]:
+    def _layouts(self) -> Tuple[Tuple[ArenaLayout, ...], ArenaLayout,
+                                Dict[str, ArenaLayout]]:
         app = self.getApp()
-        din = app.getData(self.in_handle)
+        in_layouts = []
+        for name in self.input_names:
+            d = app.getData(self.in_handles.get(name, INVALID_HANDLE))
+            if d.layout is None:
+                d.plan()
+            in_layouts.append(d.layout)
         dout = app.getData(self.out_handle)
-        if din.layout is None:
-            din.plan()
         if dout.layout is None:
             dout.plan()
         aux_layouts = {}
@@ -406,7 +494,7 @@ class Process:
             if d.layout is None:
                 d.plan()
             aux_layouts[name] = d.layout
-        return din.layout, dout.layout, aux_layouts
+        return tuple(in_layouts), dout.layout, aux_layouts
 
     def _static_key(self) -> Any:
         p = self.launch_params
@@ -416,39 +504,65 @@ class Process:
             return repr(p)
         return repr(p)
 
-    def pure_fn(self) -> Tuple[Callable, ArenaLayout, ArenaLayout, List[str]]:
-        """(fn(blob_in, *aux_blobs) -> blob_out, in_layout, out_layout,
-        aux names) — the fusable unit used by both init() and ProcessChain."""
-        in_layout, out_layout, aux_layouts = self._layouts()
+    def pure_fn(self) -> Tuple[Callable, Tuple[ArenaLayout, ...], ArenaLayout,
+                               List[str]]:
+        """(fn(*in_blobs, *aux_blobs) -> blob_out, in_layouts, out_layout,
+        aux names) — the fusable unit used by both init() and ProcessChain.
+
+        The primary input's views become :meth:`apply`'s ``views`` argument;
+        every SECONDARY streaming input is delivered through the ``aux``
+        argument under its port name — the same slot a static aux binding
+        uses — so switching a port between streamed and static wiring
+        cannot change the math (bit-identity by construction)."""
+        in_layouts, out_layout, aux_layouts = self._layouts()
+        in_names = self.input_names
         aux_names = sorted(aux_layouts)
         params = self.launch_params
+        n_in = len(in_names)
 
-        def fn(blob_in, *aux_blobs):
-            views = unpack_device(blob_in, in_layout)
+        def fn(*blobs):
+            in_blobs, aux_blobs = blobs[:n_in], blobs[n_in:]
+            views = unpack_device(in_blobs[0], in_layouts[0])
             aux = {
+                name: unpack_device(blob, lay)
+                for name, blob, lay in zip(in_names[1:], in_blobs[1:],
+                                           in_layouts[1:])
+            }
+            aux.update({
                 name: unpack_device(blob, aux_layouts[name])
                 for name, blob in zip(aux_names, aux_blobs)
-            }
+            })
             outs = self.apply(views, aux, params)
             missing = set(out_layout.names) - set(outs)
             if missing:
                 raise ValueError(f"{type(self).__name__}.apply missing outputs {missing}")
             return pack_device(outs, out_layout)
 
-        return fn, in_layout, out_layout, aux_names
+        return fn, in_layouts, out_layout, aux_names
+
+    def _donate_idx(self, in_names: Sequence[str]) -> Optional[int]:
+        """Input position whose buffer the program may donate: the first
+        wired input whose handle IS the output handle (in-place)."""
+        for i, name in enumerate(in_names):
+            if self.in_handles.get(name) == self.out_handle:
+                return i
+        return None
 
     def launchable(self) -> PureLaunchable:
         """Lower this process to its :class:`PureLaunchable` form — the one
         representation used by ``init()``, fused chains, and streaming."""
-        fn, in_layout, out_layout, aux_names = self.pure_fn()
+        fn, in_layouts, out_layout, aux_names = self.pure_fn()
+        in_names = self.input_names
         return PureLaunchable(
             fn=fn,
-            in_layout=in_layout,
+            in_names=in_names,
+            in_layouts=in_layouts,
+            in_handles=tuple(self.in_handles[n] for n in in_names),
             out_layout=out_layout,
             aux_handles=tuple(self.aux_handles[n] for n in aux_names),
             tag=f"{type(self).__module__}.{type(self).__name__}",
             static_key=self._static_key(),
-            in_place=self.out_handle == self.in_handle,
+            donate_idx=self._donate_idx(in_names),
         )
 
     def _current_aux_handles(self) -> Tuple[DataHandle, ...]:
@@ -474,27 +588,34 @@ class Process:
         for name in self.kernel_names:
             app.kernels.load(name)  # module names; idempotent
         la = self.launchable()
-        specs = [jax.ShapeDtypeStruct((la.in_layout.total_bytes,), np.uint8)]
+        specs = [jax.ShapeDtypeStruct((lay.total_bytes,), np.uint8)
+                 for lay in la.in_layouts]
         specs += self._aux_specs(la)
         self._compiled = aot_compile(
             la.fn,
             specs,
             tag=la.tag,
-            donate_argnums=(0,) if la.in_place else (),
+            donate_argnums=(la.donate_idx,) if la.donate_idx is not None
+            else (),
             static_key=(la.static_key, _layout_fingerprint(app, la)),
             mesh=app.mesh,
         )
-        self._compiled_in_place = la.in_place
+        self._compiled_in_names = la.in_names
+        self._compiled_donate_name = (
+            la.in_names[la.donate_idx] if la.donate_idx is not None else None)
         self._initialized = True
 
     def _check_donation(self) -> None:
-        if self._compiled_in_place and self.out_handle != self.in_handle:
+        name = self._compiled_donate_name
+        if name is not None and \
+                self.out_handle != self.in_handles.get(name):
             raise DonatedBufferError(
-                f"{type(self).__name__} was compiled in-place "
-                f"(donate_argnums=(0,)) but is now wired out_handle="
-                f"{self.out_handle} != in_handle={self.in_handle}; launching "
-                "would donate the caller's live input blob.  Call init() to "
-                "recompile for the new wiring.")
+                f"{type(self).__name__} was compiled in-place (input "
+                f"{name!r} donated) but is now wired out_handle="
+                f"{self.out_handle} != in_handles[{name!r}]="
+                f"{self.in_handles.get(name)}; launching would donate the "
+                "caller's live input blob.  Call init() to recompile for "
+                "the new wiring.")
 
     def launch(self, profile: ProfileParameters | None = None) -> None:
         """Hot path: execute the compiled program.  No tracing, no transfer."""
@@ -502,25 +623,33 @@ class Process:
             self.init()  # lazily init, but callers should init() explicitly
         self._check_donation()
         app = self.getApp()
-        din = app.getData(self.in_handle)
-        if din.device_blob is None:
-            app.host2device(self.in_handle)
+        # input and aux handles are read live (not snapshotted at init) so
+        # re-wiring to a same-layout Data between launches takes effect, as
+        # it always did; order matches launchable()'s positional order
+        in_blobs = []
+        in_datas = []
+        for name in self._compiled_in_names:
+            d = app.getData(self.in_handles[name])
+            if d.device_blob is None:
+                app.host2device(self.in_handles[name])
+            in_blobs.append(d.device_blob)
+            in_datas.append(d)
         aux_blobs = []
-        # aux handles are read live (not snapshotted at init) so re-wiring an
-        # aux to a same-layout Data between launches takes effect, as it
-        # always did; order matches launchable()'s positional aux order
         for h in self._current_aux_handles():
             d = app.getData(h)
             if d.device_blob is None:
                 app.host2device(h)
             aux_blobs.append(d.device_blob)
         t0 = time.perf_counter()
-        out_blob = self._compiled(din.device_blob, *aux_blobs)
+        out_blob = self._compiled(*in_blobs, *aux_blobs)
         if profile is not None and profile.enable:
             jax.block_until_ready(out_blob)
             profile.record(time.perf_counter() - t0)
-        if self.out_handle == self.in_handle:
-            din.device_blob = None  # donated
+        if self._compiled_donate_name is not None:
+            # the donated input's blob is dead; drop the stale reference
+            in_datas[
+                self._compiled_in_names.index(self._compiled_donate_name)
+            ].device_blob = None
         app._set_device_blob(self.out_handle, out_blob)
 
     # -- streaming (beyond paper; see repro.core.stream) -----------------------
@@ -537,6 +666,13 @@ class Process:
         compile cache and the donation rules of this process.  Returns one
         output Data per input, device-fresh (``sync=True`` also copies each
         result back to its host arrays).
+
+        For a multi-input process each item supplies one Data per streaming
+        input: a ``{input name -> Data}`` mapping or a positional tuple
+        (order = :attr:`input_names`).  Every input edge gets its own
+        row-aligned batch queue; the per-edge batches are zipped into one
+        joined launch (see :mod:`repro.core.stream`).  Single-input
+        processes keep taking plain Data items.
 
         ``sharded=True`` additionally splits every stacked batch across the
         ``data`` axis of the app mesh — one launch computes ``batch`` items
@@ -575,6 +711,32 @@ class ProcessChain(Process):
         self.stages.append(p)
         return self
 
+    def _chain_inputs(self) -> Tuple[List[DataHandle], List[str]]:
+        """The chain-level streaming inputs, in first-consumption order: a
+        handle a stage reads that no EARLIER stage produced must be fed
+        from outside the chain.  A multi-input stage whose secondary
+        inputs are external edges therefore makes the whole chain
+        multi-input (this is how a Pipeline join lowers to one launchable).
+
+        Each input is named after the port that first consumes it, so a
+        composite lowering to this chain keeps its own mapping contract
+        (``{"in": ..., "smaps": ...}``); a name that would collide with
+        an earlier input falls back to its positional ``in<i>`` form.
+        """
+        produced: set = set()
+        inputs: List[DataHandle] = []
+        names: List[str] = []
+        for s in self.stages:
+            for pname in s.input_names:
+                h = s.in_handles.get(pname, INVALID_HANDLE)
+                if h not in produced and h not in inputs:
+                    if pname in names:
+                        pname = f"in{len(inputs)}"
+                    inputs.append(h)
+                    names.append(pname)
+            produced.add(s.out_handle)
+        return inputs, names
+
     def launchable(self) -> PureLaunchable:
         """Fused composition of the stages' pure fns as ONE launchable unit.
 
@@ -590,20 +752,25 @@ class ProcessChain(Process):
         for s in self.stages:
             for name in s.kernel_names:
                 app.kernels.load(name)
-            parts.append((s, *s.pure_fn()))
-        first_in = self.stages[0].in_handle
+            fn, in_layouts, out_layout, aux_names = s.pure_fn()
+            stage_ins = tuple(s.in_handles[n] for n in s.input_names)
+            parts.append((s, fn, in_layouts, out_layout, stage_ins, aux_names))
+        chain_inputs, chain_in_names = self._chain_inputs()
+        n_in = len(chain_inputs)
         last_out = self.stages[-1].out_handle
 
-        def fused(blob, *all_aux):
-            # all_aux is the concatenation of each stage's aux blobs, in order
-            blobs: Dict[DataHandle, Any] = {first_in: blob}
+        def fused(*blobs):
+            # leading blobs are the chain inputs; the rest is the
+            # concatenation of each stage's aux blobs, in order
+            env: Dict[DataHandle, Any] = dict(zip(chain_inputs, blobs[:n_in]))
+            all_aux = blobs[n_in:]
             i = 0
-            for s, fn, _il, _ol, aux_names in parts:
+            for s, fn, _ils, _ol, stage_ins, aux_names in parts:
                 aux = all_aux[i : i + len(aux_names)]
                 i += len(aux_names)
-                src = blobs[s.in_handle]
-                blobs[s.out_handle] = fn(src, *aux)
-            return blobs[last_out]
+                srcs = [env[h] for h in stage_ins]
+                env[s.out_handle] = fn(*srcs, *aux)
+            return env[last_out]
 
         aux_handles: List[DataHandle] = []
         static_parts = []
@@ -614,26 +781,31 @@ class ProcessChain(Process):
         handle_ids: Dict[DataHandle, int] = {}
         def _hid(h: DataHandle) -> int:
             return handle_ids.setdefault(h, len(handle_ids))
-        for s, _fn, il, ol, aux_names in parts:
+        for s, _fn, ils, ol, stage_ins, aux_names in parts:
             static_parts.append((
                 f"{type(s).__module__}.{type(s).__qualname__}",
                 s._static_key(),
-                (_hid(s.in_handle), _hid(s.out_handle)),
+                (tuple(_hid(h) for h in stage_ins), _hid(s.out_handle)),
                 # per-stage layouts: intermediate edges with equal arena
                 # sizes but different shapes must not share one executable
-                (il, ol),
+                (ils, ol),
             ))
             aux_handles += [s.aux_handles[n] for n in aux_names]
-        in_layout = app.getData(first_in).layout or app.getData(first_in).plan()
+        in_layouts = tuple(
+            app.getData(h).layout or app.getData(h).plan()
+            for h in chain_inputs)
         out_layout = app.getData(last_out).layout or app.getData(last_out).plan()
         return PureLaunchable(
             fn=fused,
-            in_layout=in_layout,
+            in_names=tuple(chain_in_names),
+            in_layouts=in_layouts,
+            in_handles=tuple(chain_inputs),
             out_layout=out_layout,
             aux_handles=tuple(aux_handles),
             tag=f"ProcessChain[{len(parts)}]",
             static_key=tuple(static_parts),
-            in_place=last_out == first_in,
+            donate_idx=(chain_inputs.index(last_out)
+                        if last_out in chain_inputs else None),
         )
 
     def init(self) -> None:
@@ -644,20 +816,26 @@ class ProcessChain(Process):
                 s.init()
             self._initialized = True
             return
-        # fused: the chain becomes a single Process over first-in/last-out
-        self.in_handle = self.stages[0].in_handle
-        self.out_handle = self.stages[-1].out_handle
+        # fused: the chain becomes a single Process over its chain-level
+        # inputs (first stage's primary input + any interior fan-in edges
+        # fed from outside) and the last stage's output
         la = self.launchable()
-        specs = [jax.ShapeDtypeStruct((la.in_layout.total_bytes,), np.uint8)]
+        self.in_handles = dict(zip(la.in_names, la.in_handles))
+        self.out_handle = self.stages[-1].out_handle
+        specs = [jax.ShapeDtypeStruct((lay.total_bytes,), np.uint8)
+                 for lay in la.in_layouts]
         specs += self._aux_specs(la)
         self._compiled = aot_compile(
             la.fn, specs, tag=la.tag,
-            donate_argnums=(0,) if la.in_place else (),
+            donate_argnums=(la.donate_idx,) if la.donate_idx is not None
+            else (),
             static_key=(la.static_key,
                         _layout_fingerprint(self.getApp(), la)),
             mesh=self.getApp().mesh,
         )
-        self._compiled_in_place = la.in_place
+        self._compiled_in_names = la.in_names
+        self._compiled_donate_name = (
+            la.in_names[la.donate_idx] if la.donate_idx is not None else None)
         self._initialized = True
 
     def _current_aux_handles(self) -> Tuple[DataHandle, ...]:

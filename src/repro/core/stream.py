@@ -15,17 +15,27 @@ inference requests):
 
 * :class:`BatchedProcess` — AOT-compiles a process's
   :class:`~repro.core.process.PureLaunchable` ONCE for a leading batch
-  axis: ``vmap`` over the arena-blob unpack/compute/pack, aux blobs
-  broadcast.  k independent Data sets become one launch instead of a
-  Python loop of k launches.  Reuses the global compile cache (the batch
-  size is part of the spec key) and the donation rule (in-place programs
-  donate the stacked input blob — always a transfer temporary, so donation
-  is safe by construction).
+  axis: ``vmap`` over the arena-blob unpack/compute/pack, EVERY streaming
+  input batched, aux blobs broadcast.  k independent Data sets become one
+  launch instead of a Python loop of k launches.  Reuses the global
+  compile cache (the batch size is part of the spec key) and the donation
+  rule (in-place programs donate the stacked blob of the donated input —
+  always a transfer temporary, so donation is safe by construction).
 
 * :func:`stream_launch` — the engine behind ``Process.stream(datasets,
   batch=k)`` and the Pipeline's ``mode="stream"``: pack host-side, group
   into batches, feed through a StreamQueue, launch batched, and scatter
   the per-item output blobs into fresh output Data objects.
+
+* :class:`_JoinFeed` — multi-input (fan-in) streaming.  A launchable with
+  N streaming inputs gets N per-edge StreamQueues whose batches are
+  **zipped row-aligned** before each launch: one shared group plan decides
+  which items (and how many padded rows) every batch carries, each edge's
+  queue stacks ITS blobs for exactly those rows, and one joined launch
+  consumes one batch from every edge.  The ragged-tail policy below spans
+  all edges — a tail executable is compiled for the whole joined program,
+  never per edge.  Items for a multi-input launchable are tuples (or
+  ``{input name -> Data}`` mappings), one Data per input edge.
 
 * :class:`_BatchPlan` — the ragged-tail policy.  A final batch with fewer
   than ``batch`` items is either padded by repeating the last item (cheap
@@ -77,7 +87,8 @@ from __future__ import annotations
 import time
 import weakref
 from collections import deque
-from typing import Any, Iterable, Iterator, List, Optional, Sequence
+from typing import (Any, Iterable, Iterator, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 import jax
 import numpy as np
@@ -182,16 +193,20 @@ def _is_deleted(blob: jax.Array) -> bool:
 class BatchedProcess:
     """A process AOT-compiled once for a leading batch axis.
 
-    ``fn(blob, *aux) -> blob`` becomes ``vmap(fn)((k, nbytes) blobs, aux
-    broadcast)``; compilation goes through :func:`~repro.core.process.
-    aot_compile`, so repeated construction for the same process/batch size
-    hits the global compile cache (the paper's "init once" at batch scale).
+    ``fn(*in_blobs, *aux) -> blob`` becomes ``vmap(fn)`` over ``(k,
+    nbytes)`` stacked blobs — EVERY streaming input carries the batch
+    axis, aux blobs broadcast; compilation goes through
+    :func:`~repro.core.process.aot_compile`, so repeated construction for
+    the same process/batch size hits the global compile cache (the paper's
+    "init once" at batch scale).
 
     ``sharded=True`` compiles the batched program with ``in_shardings`` /
-    ``out_shardings`` that split the stacked blob's leading axis over the
-    app mesh's ``data`` axis (aux blobs replicated): one launch runs
-    ``batch`` items spread across every selected device.  The batch size
-    must be divisible by the ``data``-axis size.
+    ``out_shardings`` that split every stacked blob's leading axis over
+    the app mesh's ``data`` axis (aux blobs replicated): one launch runs
+    ``batch`` items spread across every selected device, with each input
+    edge's rows co-located item-wise (row i of every edge lands on the
+    same device — a join never shuffles items across devices).  The batch
+    size must be divisible by the ``data``-axis size.
     """
 
     def __init__(self, process, batch: int, *, sharded: bool = False):
@@ -202,6 +217,7 @@ class BatchedProcess:
         self.sharded = sharded
         #: placement of stacked input batches (None = primary device); set
         #: by init() and reused by stream_launch as the StreamQueue target
+        #: for every input edge
         self.batch_sharding: Optional[jax.sharding.Sharding] = None
         self.launchable: Optional[PureLaunchable] = None
         self._compiled = None
@@ -212,8 +228,11 @@ class BatchedProcess:
         for name in p.kernel_names:
             app.kernels.load(name)
         la = p.launchable()
-        batched = jax.vmap(la.fn, in_axes=(0,) + (None,) * len(la.aux_handles))
-        specs = [batched_spec(la.in_layout, self.batch)] + p._aux_specs(la)
+        n_in = la.n_inputs
+        batched = jax.vmap(
+            la.fn, in_axes=(0,) * n_in + (None,) * len(la.aux_handles))
+        specs = [batched_spec(lay, self.batch) for lay in la.in_layouts]
+        specs += p._aux_specs(la)
         in_shardings = out_shardings = None
         if self.sharded:
             mesh = app.mesh
@@ -229,13 +248,14 @@ class BatchedProcess:
                     "count so every device gets whole items")
             self.batch_sharding = app.data_sharding(("data",))
             replicated = app.data_sharding()
-            in_shardings = (self.batch_sharding,) + \
+            in_shardings = (self.batch_sharding,) * n_in + \
                 (replicated,) * len(la.aux_handles)
             out_shardings = self.batch_sharding
         self._compiled = aot_compile(
             batched, specs,
             tag=f"{la.tag}@vmap",
-            donate_argnums=(0,) if la.in_place else (),
+            donate_argnums=(la.donate_idx,) if la.donate_idx is not None
+            else (),
             static_key=(la.static_key, _layout_fingerprint(app, la)),
             mesh=app.mesh,
             in_shardings=in_shardings,
@@ -244,13 +264,19 @@ class BatchedProcess:
         self.launchable = la
         return self
 
-    def __call__(self, stacked_blob: jax.Array,
-                 aux_blobs: Sequence[jax.Array]) -> jax.Array:
+    def __call__(self, stacked_blobs,
+                 aux_blobs: Sequence[jax.Array] = ()) -> jax.Array:
         """One launch for ``batch`` independent Data sets.  Asynchronous —
-        the caller decides when (whether) to block on the result."""
+        the caller decides when (whether) to block on the result.
+
+        ``stacked_blobs`` is one ``(k, nbytes)`` blob per streaming input
+        (a lone array is accepted for single-input processes)."""
         if self._compiled is None:
             self.init()
-        return self._compiled(stacked_blob, *aux_blobs)
+        if isinstance(stacked_blobs, jax.Array) or hasattr(
+                stacked_blobs, "shape"):
+            stacked_blobs = (stacked_blobs,)
+        return self._compiled(*stacked_blobs, *aux_blobs)
 
 
 class _BatchPlan:
@@ -309,6 +335,18 @@ class _BatchPlan:
             self._tails[rows] = bp
         return bp
 
+    def stack_group(self, items: Sequence[Tuple[np.ndarray, ...]]
+                    ) -> List[np.ndarray]:
+        """Stacked per-edge host blobs for one row-aligned group of items
+        (each a per-edge blob tuple): ``launch_rows`` decides the row
+        count, padding repeats the last item.  The one place the group ->
+        stacked-batch policy lives: :class:`_JoinFeed` (stream + manual
+        serve drain) and the background serve flush both call it."""
+        rows = self.launch_rows(len(items))
+        return [
+            stack_host_blobs(_pad_rows([it[e] for it in items], rows), lay)
+            for e, lay in enumerate(self.launchable.in_layouts)]
+
 
 def _host_blob_of(data: Data) -> np.ndarray:
     """Authoritative host blob of one input Data (syncing device→host first
@@ -320,28 +358,114 @@ def _host_blob_of(data: Data) -> np.ndarray:
     return data.pack_host()
 
 
-def _batched_host_blobs(datasets: Sequence[Data], layout,
-                        plan: _BatchPlan) -> Iterator[np.ndarray]:
-    """Yield stacked host blobs of ``plan.batch`` rows each; the ragged
-    tail carries ``plan.launch_rows(r)`` rows — padded by repeating the
-    last item, or left at its true size for a tail executable (padded
-    outputs are dropped downstream either way)."""
-    group: List[np.ndarray] = []
-    for d in datasets:
+def normalize_stream_item(item: Any, la: PureLaunchable,
+                          *, what: str = "dataset") -> Tuple[Data, ...]:
+    """One stream item -> one Data per streaming input, positionally
+    ordered to match ``la.in_names``/``la.in_layouts``.
+
+    Accepted forms: a lone :class:`Data` (single-input launchables only),
+    a ``{input name -> Data}`` mapping, or a positional tuple/list.  The
+    error messages name the input edges so a mis-shaped join is
+    diagnosable."""
+    names = la.in_names
+    if isinstance(item, Data):
+        if la.n_inputs != 1:
+            raise ValueError(
+                f"{what} is a single Data but the launchable has "
+                f"{la.n_inputs} streaming inputs {list(names)}; pass one "
+                "Data per input edge as a mapping {name: Data} or a "
+                "positional tuple")
+        return (item,)
+    if isinstance(item, Mapping):
+        missing = [n for n in names if n not in item]
+        extra = [n for n in item if n not in names]
+        if missing or extra:
+            raise ValueError(
+                f"{what} mapping does not match the streaming inputs "
+                f"{list(names)}: missing {missing}, unknown {extra}")
+        return tuple(item[n] for n in names)
+    if isinstance(item, (tuple, list)):
+        if len(item) != la.n_inputs:
+            raise ValueError(
+                f"{what} supplies {len(item)} Data for {la.n_inputs} "
+                f"streaming inputs {list(names)}")
+        return tuple(item)
+    raise TypeError(
+        f"{what} must be a Data, a {{input name -> Data}} mapping, or a "
+        f"tuple (got {type(item).__name__})")
+
+
+def _edge_blobs(item: Tuple[Data, ...], la: PureLaunchable,
+                *, what: str = "dataset",
+                names: Optional[Sequence[str]] = None,
+                err: type = ValueError) -> Tuple[np.ndarray, ...]:
+    """Per-edge packed host blobs of one normalized item, layout-checked
+    against every input edge (mismatches name the offending edge).  The
+    ONE pack-and-validate loop shared by streaming and serving —
+    ``names`` overrides the display names (serving shows graph edge names
+    instead of launchable input names), ``err`` the exception type."""
+    blobs = []
+    for name, layout, d in zip(names or la.in_names, la.in_layouts, item):
         if d.layout is None:
             d.plan()
         if d.layout != layout:
-            raise ValueError(
-                f"dataset layout {d.layout} does not match the wired input "
-                f"layout {layout}; all streamed Data sets must be homogeneous")
-        group.append(_host_blob_of(d))
-        if len(group) == plan.batch:
-            yield stack_host_blobs(group, layout)
-            group = []
-    if group:
-        rows = plan.launch_rows(len(group))
-        group += [group[-1]] * (rows - len(group))
-        yield stack_host_blobs(group, layout)
+            raise err(
+                f"{what} layout for input edge {name!r} ({d.layout}) does "
+                f"not match the wired layout {layout}; all streamed Data "
+                "sets must be homogeneous per edge")
+        blobs.append(_host_blob_of(d))
+    return tuple(blobs)
+
+
+def _pad_rows(blobs: List[np.ndarray], rows: int) -> List[np.ndarray]:
+    """Pad a group's blob list to ``rows`` by repeating the last item
+    (padded outputs are dropped downstream)."""
+    return blobs + [blobs[-1]] * (rows - len(blobs))
+
+
+class _JoinFeed:
+    """Row-aligned per-edge batch feeds sharing ONE group plan.
+
+    ``groups`` yields lists of per-item blob tuples (one blob per input
+    edge, at most ``plan.batch`` items per list).  Each edge's
+    :meth:`feed` generator yields that edge's stacked batch for exactly
+    the same item groups — built by :meth:`_BatchPlan.stack_group`, so
+    row count and padding are decided once for ALL edges — and zipping
+    the per-edge StreamQueues produces row-aligned batches for a joined
+    launch.  Whichever queue prefetches furthest forms the shared groups;
+    a group's stacked blobs are released once every edge consumed them
+    (memory stays bounded by queue depth, not stream length).
+    """
+
+    def __init__(self, plan: _BatchPlan,
+                 groups: Iterator[List[Tuple[np.ndarray, ...]]]):
+        self.plan = plan
+        self.n_edges = plan.launchable.n_inputs
+        self._it = groups
+        self._formed: List[Optional[List[np.ndarray]]] = []
+        self._reads: List[int] = []
+        self._done = False
+
+    def _ensure(self, pos: int) -> bool:
+        while len(self._formed) <= pos and not self._done:
+            try:
+                items = next(self._it)
+            except StopIteration:
+                self._done = True
+                return False
+            self._formed.append(self.plan.stack_group(items))
+            self._reads.append(0)
+        return pos < len(self._formed)
+
+    def feed(self, edge: int) -> Iterator[np.ndarray]:
+        pos = 0
+        while self._ensure(pos):
+            stacked = self._formed[pos][edge]
+            self._reads[pos] += 1
+            if self._reads[pos] == self.n_edges:
+                self._formed[pos] = None     # all edges consumed: release
+            pos += 1
+            yield stacked
 
 
 def _prepare_aux(app, la: PureLaunchable, sharded: bool) -> List[jax.Array]:
@@ -368,15 +492,17 @@ def _prepare_aux(app, la: PureLaunchable, sharded: bool) -> List[jax.Array]:
     return aux_blobs
 
 
-def stream_launch(process, datasets: Sequence[Data], *, batch: int = 1,
+def stream_launch(process, datasets: Sequence[Any], *, batch: int = 1,
                   depth: int = 2, sync: bool = False, sharded: bool = False,
                   tail_waste_threshold: float = 0.5,
                   profile: ProfileParameters | None = None) -> List[Data]:
     """Run ``datasets`` through ``process`` batched + double-buffered.
 
-    See :meth:`repro.core.process.Process.stream` for the public contract,
-    the module docstring for the ``sharded=True`` placement contract and
-    the ragged-tail policy (``tail_waste_threshold``).
+    See :meth:`repro.core.process.Process.stream` for the public contract
+    (including multi-input items: one Data per input edge, as a mapping or
+    tuple), the module docstring for the ``sharded=True`` placement
+    contract, the per-edge join feeds and the ragged-tail policy
+    (``tail_waste_threshold``).
     """
     datasets = list(datasets)
     if not datasets:
@@ -394,13 +520,31 @@ def stream_launch(process, datasets: Sequence[Data], *, batch: int = 1,
         # launch loop, so compilation never stalls the double buffer
         plan.executable(plan.launch_rows(tail))
 
-    queue = StreamQueue(_batched_host_blobs(datasets, la.in_layout, plan),
-                        device=plan.batch_sharding or app.device, depth=depth)
+    # one row-aligned feed per input edge — a multi-input launchable gets
+    # per-edge StreamQueues whose batches are zipped before each launch.
+    # Items are packed lazily as the queues pull (memory stays bounded by
+    # queue depth, as in the single-input path)
+    def groups() -> Iterator[List[Tuple[np.ndarray, ...]]]:
+        buf: List[Tuple[np.ndarray, ...]] = []
+        for i, d in enumerate(datasets):
+            what = f"datasets[{i}]"
+            buf.append(_edge_blobs(normalize_stream_item(d, la, what=what),
+                                   la, what=what))
+            if len(buf) == batch:
+                yield buf
+                buf = []
+        if buf:
+            yield buf
+
+    feed = _JoinFeed(plan, groups())
+    target = plan.batch_sharding or app.device
+    queues = [StreamQueue(feed.feed(e), device=target, depth=depth)
+              for e in range(la.n_inputs)]
     t0 = time.perf_counter()
     out_batches: List[jax.Array] = []
-    for dev_batch in queue:           # batch i+1 transfers while i computes
-        bp = plan.executable(int(dev_batch.shape[0]))
-        out_batches.append(bp(dev_batch, aux_blobs))
+    for dev_blobs in zip(*queues):    # batch i+1 transfers while i computes
+        bp = plan.executable(int(dev_blobs[0].shape[0]))
+        out_batches.append(bp(dev_blobs, aux_blobs))
     # settle the aux uploads' coherence bookkeeping: by now every launch has
     # consumed the aux blobs, so this only waits on the transfers themselves
     app.wait_transfers(la.aux_handles)

@@ -21,17 +21,29 @@ conjugate = ComplexElementProdParams(conjugate=True)
 
 
 class ComplexElementProd(Process):
-    """kdata[f, c] *= conj?(smaps[c]); smaps come from the same KData arena
-    (or from an aux Data handle named 'smaps')."""
+    """kdata[f, c] *= conj?(smaps[c]) — a true two-input operator.
+
+    The sensitivity maps arrive through the ``smaps`` **input port**:
+
+    * bound to a **named edge**, they are a second streaming input — a
+      pipeline join, batched per item alongside the k-space stream in the
+      stream/serve modes;
+    * bound to **concrete Data**, they are static and broadcast across
+      every batch (the legacy aux behaviour, bit-identical);
+    * left unbound, they are read from the same arena as the primary
+      input (``views["sensitivity_maps"]``, the single-KData layout).
+    """
 
     kernel_names = ("complex_elementprod",)
 
     ports = {"in": Port(names=("kdata",), dtype=jnp.complexfloating,
                         doc="K-/X-space set; needs 'sensitivity_maps' too "
-                            "unless the 'smaps' aux port is bound"),
+                            "unless the 'smaps' input port is bound"),
              "out": Port(names=("kdata",)),
-             "smaps": Port(aux=True, optional=True,
-                           doc="sensitivity maps as a separate Data")}
+             "smaps": Port(optional=True, dtype=jnp.complexfloating,
+                           doc="sensitivity maps as a separate Data — a "
+                               "streaming input when bound to an edge, "
+                               "static broadcast when bound to Data")}
 
     def apply(self, views, aux, params):
         params = params or conjugate

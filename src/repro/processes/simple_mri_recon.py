@@ -32,7 +32,15 @@ class SimpleMRIRecon(Process):
     """``in_place=True`` is the paper-faithful pipeline (stages overwrite the
     input KData, as in listing 6).  ``in_place=False`` routes through a
     scratch KData handle so the input survives repeated launches (the
-    throughput-benchmark configuration)."""
+    throughput-benchmark configuration).
+
+    ``join=True`` rebuilds the composite as a real fan-in graph: the
+    k-space stream and the sensitivity-map stream are SEPARATE inputs —
+    ``"in"`` takes a kdata-only Data, the ``"smaps"`` input port takes the
+    maps — and the internal :class:`ComplexElementProd` consumes the maps
+    as its second streaming input (k-space ⋈ smaps).  The joined composite
+    launches, streams (per-item maps!) and serves through the same
+    front-ends, bit-identical to the single-arena layout."""
 
     ports = {"in": Port(names=("kdata", "sensitivity_maps"),
                         dtype=jnp.complexfloating,
@@ -42,12 +50,24 @@ class SimpleMRIRecon(Process):
                          doc="reconstructed x-images (F, H, W)")}
 
     def __init__(self, app=None, mode: str = "staged", use_pallas: bool = False,
-                 in_place: bool = True):
+                 in_place: bool = True, join: bool = False):
         super().__init__(app)
         self.mode = mode
         self.use_pallas = use_pallas
         self.in_place = in_place
+        self.join = join
         self.chain: ProcessChain | None = None
+        if join:
+            # instance-level contract: kdata and the maps are separate
+            # streaming inputs instead of one fused arena
+            self.ports = {
+                "in": Port(names=("kdata",), dtype=jnp.complexfloating,
+                           doc="multicoil K-space: kdata (F, C, H, W)"),
+                "smaps": Port(dtype=jnp.complexfloating,
+                              doc="sensitivity maps (C, H, W) as their own "
+                                  "streaming input (join edge)"),
+                "out": Port(names=("xdata",),
+                            doc="reconstructed x-images (F, H, W)")}
 
     def out_specs(self, in_specs, aux_specs=None):
         k = in_specs["kdata"]
@@ -71,6 +91,17 @@ class SimpleMRIRecon(Process):
         p_prod = ComplexElementProd(app)
         p_prod.in_handle = work
         p_prod.out_handle = work                     # in place on scratch
+        if self.join:
+            # the real join: the maps stream into ComplexElementProd as its
+            # second input handle — the chain-level launchable becomes
+            # two-input ((kdata stream) ⋈ (smaps stream))
+            smaps_h = self.in_handles.get("smaps")
+            if smaps_h is None:
+                raise RuntimeError(
+                    "SimpleMRIRecon(join=True) needs its 'smaps' input "
+                    "wired (in_handles['smaps'] or the smaps port bound "
+                    "to an edge)")
+            p_prod.in_handles["smaps"] = smaps_h
         p_prod.set_launch_parameters(
             ComplexElementProdParams(conjugate=True, use_pallas=self.use_pallas))
 

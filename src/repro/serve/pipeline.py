@@ -6,20 +6,33 @@ executor in a request/response loop —
 
     admission queue  ->  dynamic batcher  ->  batched (sharded) launches
 
-* **Admission** — ``submit()`` packs the request's Data into its host
-  arena blob immediately (validating the layout against the pipeline's
-  input edge) and appends it to a pending deque.
+* **Admission** — ``submit()`` packs the request's Data into host arena
+  blobs immediately (validating each against the pipeline's input edges)
+  and appends it to a pending deque.  A fan-in pipeline (several input
+  edges) takes a **multi-tensor request**: one Data per input edge, as a
+  ``{edge name -> Data}`` mapping — each edge is packed and batched
+  independently, then joined in one launch.
 * **Dynamic batching** — ``drain()`` groups whatever is pending into
-  stacked blobs of up to ``batch`` rows.  Partially-full flushes follow
-  the streaming executor's ragged-tail policy
-  (:class:`repro.core.stream._BatchPlan`): pad by repetition when the
-  waste is small, or run a second executable compiled for the flush size
-  — both results are bit-identical to full batches.  Requests submitted
-  while a drain is in progress are picked up by the same drain.
-* **Transfer/compute overlap** — the stacked blobs feed a
-  :class:`repro.core.stream.StreamQueue` (the admission buffer per the
-  ROADMAP): batch *i+1* is in flight to the device — sharded across the
-  mesh's ``data`` axis when ``sharded=True`` — while batch *i* computes.
+  stacked blobs of up to ``batch`` rows **per input edge**, row-aligned
+  across edges (request i is row i of every edge's batch).
+  Partially-full flushes follow the streaming executor's ragged-tail
+  policy (:class:`repro.core.stream._BatchPlan`): pad by repetition when
+  the waste is small, or run a second executable compiled for the flush
+  size — both results are bit-identical to full batches.  Requests
+  submitted while a drain is in progress are picked up by the same drain.
+* **Transfer/compute overlap** — the stacked blobs feed per-edge
+  :class:`repro.core.stream.StreamQueue` s (the admission buffer per the
+  ROADMAP), zipped before each launch: batch *i+1* is in flight to the
+  device — sharded across the mesh's ``data`` axis when ``sharded=True``
+  — while batch *i* computes.
+* **Flush timeout** — with ``flush_timeout`` (seconds) set, a background
+  drain thread serves continuously: full batches launch immediately, and
+  a PARTIAL batch is flushed once its oldest request has waited
+  ``flush_timeout`` instead of waiting for a full batch (the
+  latency-sensitive serving policy from the ROADMAP).  Responses are
+  picked up with :meth:`PipelineServer.collect` (or a final ``drain()``);
+  ``close()`` stops the thread after flushing what is left.
+  ``benchmarks/serve_latency.py`` reports the p50/p99 impact.
 
 Each response carries its request id and wall-clock latency from
 ``submit()`` to result-ready, which is what ``benchmarks/serve_latency.py``
@@ -30,17 +43,18 @@ does).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
-from typing import Any, Deque, List, Optional
+from typing import Any, Deque, List, Optional, Sequence, Tuple
 
 import jax
 
 from repro.core.data import Data
 from repro.core.process import PortError
-from repro.core.stream import (StreamQueue, _BatchPlan, _host_blob_of,
-                               _prepare_aux)
-from repro.core.arena import split_batched_blob, stack_host_blobs
+from repro.core.stream import (StreamQueue, _BatchPlan, _JoinFeed,
+                               _edge_blobs, _prepare_aux)
+from repro.core.arena import split_batched_blob
 from repro.core.sync import Coherence
 
 
@@ -61,7 +75,7 @@ class ServeResponse:
 @dataclasses.dataclass
 class _Request:
     rid: int
-    blob: Any                   # packed host arena blob
+    blobs: Tuple[Any, ...]      # packed host arena blobs, one per input edge
     submitted_s: float
 
 
@@ -74,6 +88,15 @@ class PipelineServer:
         rids = [server.submit(kdata) for kdata in requests]
         responses = server.drain()          # ServeResponse per request
 
+        # fan-in pipeline: multi-tensor requests, one Data per input edge
+        rid = server.submit({"kspace": kd, "smaps": sm})
+
+        # latency-sensitive: background drain with a partial-batch flush
+        server = pipe.serve(batch=8, flush_timeout=0.010)
+        rids = [server.submit(r) for r in requests]   # flushes on its own
+        responses = server.collect(len(rids), timeout=5.0)
+        server.close()
+
     The pipeline is built lazily from the first submitted request (or
     reused if already built); every launch reuses the one AOT-compiled
     batched program, so serving keeps the paper's per-iteration overhead
@@ -81,26 +104,41 @@ class PipelineServer:
     """
 
     def __init__(self, pipeline, *, batch: int = 8, sharded: bool = False,
-                 depth: int = 2, tail_waste_threshold: float = 0.5):
+                 depth: int = 2, tail_waste_threshold: float = 0.5,
+                 flush_timeout: Optional[float] = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
+        if flush_timeout is not None and flush_timeout <= 0:
+            raise ValueError(
+                f"flush_timeout must be > 0 seconds, got {flush_timeout}")
         self.pipeline = pipeline
         self.batch = batch
         self.sharded = sharded
         self.depth = depth
         self.tail_waste_threshold = tail_waste_threshold
+        self.flush_timeout = flush_timeout
         self._pending: Deque[_Request] = deque()
         self._next_rid = 0
         self._plan: Optional[_BatchPlan] = None
+        self._built = None
         self._aux_blobs: Optional[List[Any]] = None
         self.served = 0             # completed requests (introspection)
         self.launches = 0           # batched launches issued
+        # background drain state (flush_timeout mode)
+        self._cv = threading.Condition()
+        self._completed: List[ServeResponse] = []
+        self._worker: Optional[threading.Thread] = None
+        self._busy = False          # worker is launching a group
+        self._force_flush = False
+        self._stop_flag = False
+        self._worker_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------ lifecycle
-    def _ensure_built(self, data: Data) -> None:
+    def _ensure_built(self, request: Any) -> None:
         if self._plan is not None:
             return
-        built = self.pipeline.build(data)
+        built = self.pipeline.build(request)
+        self._built = built
         self._plan = _BatchPlan(
             built.executor, self.batch, sharded=self.sharded,
             tail_waste_threshold=self.tail_waste_threshold).init()
@@ -113,30 +151,106 @@ class PipelineServer:
 
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        with self._cv:
+            return len(self._pending)
+
+    @property
+    def input_edges(self) -> Tuple[str, ...]:
+        """The pipeline's input edges in batch position order (the order
+        multi-tensor requests are stacked in)."""
+        if self._built is None:
+            raise RuntimeError("server not built yet (submit a request)")
+        return self._built.input_order
+
+    def warmup(self) -> None:
+        """Pre-compile every executable a drain might need: the full
+        batch plus every partial-flush row count the ragged-tail policy
+        can pick.  Keeps first-seen group sizes (e.g. timing-dependent
+        partial flushes under ``flush_timeout``) from paying XLA compile
+        time inside a served window."""
+        if self._plan is None:
+            raise RuntimeError("server not built yet (submit a request)")
+        for r in range(1, self.batch + 1):
+            self._plan.executable(self._plan.launch_rows(r))
 
     # ------------------------------------------------------------ admission
-    def submit(self, data: Data) -> int:
-        """Admit one request: validate, pack to a host arena blob, queue.
-        Returns the request id used to match the response."""
-        self._ensure_built(data)
+    def _pack_request(self, request: Any) -> Tuple[Any, ...]:
+        """Normalize + validate one request into per-edge host blobs
+        (same pack/validate loop as the streaming executor, displaying
+        graph edge names and raising PortError, the serve-layer type)."""
         la = self._plan.launchable
-        if data.layout is None:
-            data.plan()
-        if data.layout != la.in_layout:
-            raise PortError(
-                f"request layout {data.layout} does not match the "
-                f"pipeline's input layout {la.in_layout}")
-        rid = self._next_rid
-        self._next_rid += 1
-        self._pending.append(
-            _Request(rid, _host_blob_of(data), time.perf_counter()))
+        item = self.pipeline._item_tuple(self._built, request,
+                                         what="request")
+        if isinstance(item, Data):
+            item = (item,)
+        return _edge_blobs(item, la, what="request",
+                           names=self._built.input_order, err=PortError)
+
+    def submit(self, request: Any) -> int:
+        """Admit one request: validate, pack to host arena blobs (one per
+        input edge), queue.  Returns the request id used to match the
+        response.  With ``flush_timeout`` set this also (lazily) starts
+        the background drain thread and wakes it."""
+        self._ensure_built(request)
+        blobs = self._pack_request(request)
+        with self._cv:
+            self._check_worker_error()
+            rid = self._next_rid
+            self._next_rid += 1
+            self._pending.append(_Request(rid, blobs, time.perf_counter()))
+            if self.flush_timeout is not None:
+                if self._worker is None:
+                    self._worker = threading.Thread(
+                        target=self._worker_loop,
+                        name="pipeline-server-drain", daemon=True)
+                    self._worker.start()
+                self._cv.notify_all()
         return rid
 
+    def _check_worker_error(self) -> None:
+        """(Caller holds the lock.)  A launch/compile failure in the
+        background thread is terminal for the server: surface it to every
+        later caller instead of hanging or silently dropping requests."""
+        if self._worker_error is not None:
+            raise RuntimeError(
+                "the background drain thread died; the server cannot "
+                "serve any more requests (requests of the failing batch "
+                "were dropped)") from self._worker_error
+
     # ------------------------------------------------------------- serving
+    def _responses_for(self, group: Sequence[_Request],
+                       out: jax.Array, t_done: float) -> List[ServeResponse]:
+        la = self._plan.launchable
+        per_item = split_batched_blob(out)[:len(group)]
+        self.launches += 1
+        responses = []
+        for req, blob in zip(group, per_item):
+            d = Data.from_layout(la.out_layout)
+            d.device_blob = blob
+            d.coherence = Coherence.DEVICE_FRESH
+            responses.append(ServeResponse(
+                rid=req.rid, data=d, submitted_s=req.submitted_s,
+                completed_s=t_done))
+        return responses
+
     def drain(self) -> List[ServeResponse]:
         """Serve every pending request (including ones admitted while the
-        drain runs); returns responses in completion (launch) order."""
+        drain runs); returns the responses in completion (launch) order.
+
+        With the background drain thread active this instead forces an
+        immediate flush of any partial batch, waits for the thread to go
+        idle, and returns everything completed but not yet collected."""
+        if self._worker is not None:
+            with self._cv:
+                self._force_flush = True
+                self._cv.notify_all()
+                while (self._pending or self._busy) \
+                        and self._worker_error is None:
+                    self._cv.wait()
+                self._check_worker_error()
+                self._force_flush = False
+                out, self._completed = self._completed, []
+            return out
         if self._plan is None or not self._pending:
             return []
         plan = self._plan
@@ -153,38 +267,132 @@ class PipelineServer:
 
         groups: Deque[List[_Request]] = deque()
 
-        def stacked_batches():
+        def group_iter():
             # dynamic batcher: whatever is pending right now, up to `batch`
             # rows per launch; the parallel `groups` deque carries the
-            # request bookkeeping in the same order the queue yields blobs
-            while self._pending:
-                group: List[_Request] = []
-                while self._pending and len(group) < self.batch:
-                    group.append(self._pending.popleft())
-                rows = plan.launch_rows(len(group))
-                blobs = [r.blob for r in group]
-                blobs += [blobs[-1]] * (rows - len(blobs))
+            # request bookkeeping in the same order the feeds yield blobs
+            while True:
+                with self._cv:
+                    if not self._pending:
+                        return
+                    group: List[_Request] = []
+                    while self._pending and len(group) < self.batch:
+                        group.append(self._pending.popleft())
                 groups.append(group)
-                yield stack_host_blobs(blobs, la.in_layout)
+                yield [r.blobs for r in group]
 
-        queue = StreamQueue(stacked_batches(),
-                            device=plan.batch_sharding or app.device,
-                            depth=self.depth)
+        # one row-aligned feed per input edge, zipped per launch (the
+        # fan-in join path; single-input pipelines are the 1-edge case)
+        feed = _JoinFeed(plan, group_iter())
+        target = plan.batch_sharding or app.device
+        queues = [StreamQueue(feed.feed(e), device=target, depth=self.depth)
+                  for e in range(la.n_inputs)]
         responses: List[ServeResponse] = []
-        for dev_batch in queue:       # next flush transfers while this runs
-            out = plan.executable(int(dev_batch.shape[0]))(dev_batch,
-                                                           aux_blobs)
+        for dev_blobs in zip(*queues):  # next flush transfers while this runs
+            out = plan.executable(int(dev_blobs[0].shape[0]))(dev_blobs,
+                                                              aux_blobs)
             jax.block_until_ready(out)      # latency = result actually ready
             t_done = time.perf_counter()
-            group = groups.popleft()
-            per_item = split_batched_blob(out)[:len(group)]
-            self.launches += 1
-            for req, blob in zip(group, per_item):
-                d = Data.from_layout(la.out_layout)
-                d.device_blob = blob
-                d.coherence = Coherence.DEVICE_FRESH
-                responses.append(ServeResponse(
-                    rid=req.rid, data=d, submitted_s=req.submitted_s,
-                    completed_s=t_done))
+            responses.extend(self._responses_for(groups.popleft(), out,
+                                                 t_done))
         self.served += len(responses)
         return responses
+
+    # ------------------------------------------- background drain (timeout)
+    def _worker_loop(self) -> None:
+        plan = self._plan
+        while True:
+            with self._cv:
+                while True:
+                    if self._pending:
+                        n = len(self._pending)
+                        if (n >= self.batch or self._force_flush
+                                or self._stop_flag):
+                            break
+                        waited = time.perf_counter() - \
+                            self._pending[0].submitted_s
+                        remaining = self.flush_timeout - waited
+                        if remaining <= 0:
+                            break           # oldest request timed out: flush
+                        self._cv.wait(timeout=remaining)
+                    else:
+                        if self._stop_flag:
+                            return
+                        self._cv.wait()
+                k = min(len(self._pending), self.batch)
+                group = [self._pending.popleft() for _ in range(k)]
+                self._busy = True
+            responses: List[ServeResponse] = []
+            error: Optional[BaseException] = None
+            try:
+                rows = plan.launch_rows(len(group))
+                target = plan.batch_sharding or plan.process.getApp().device
+                stacked = tuple(
+                    jax.device_put(blob, target)
+                    for blob in plan.stack_group([r.blobs for r in group]))
+                out = plan.executable(rows)(stacked, self._aux_blobs)
+                jax.block_until_ready(out)
+                responses = self._responses_for(group, out,
+                                                time.perf_counter())
+            except BaseException as e:    # noqa: BLE001 — must not die silent
+                error = e
+            finally:
+                # responses (or the terminal error) land under the SAME lock
+                # transition that clears busy: a concurrent drain() cannot
+                # observe idle-but-empty, nor hang on a dead worker
+                with self._cv:
+                    self._completed.extend(responses)
+                    self.served += len(responses)
+                    self._busy = False
+                    if error is not None:
+                        self._worker_error = error
+                    self._cv.notify_all()
+            if error is not None:
+                return                    # terminal: callers re-raise it
+
+    def collect(self, n: Optional[int] = None,
+                timeout: Optional[float] = None) -> List[ServeResponse]:
+        """Take completed responses from the background drain.  Blocks
+        until at least ``n`` responses are available (or ``timeout``
+        seconds passed); ``n=None`` returns whatever is ready now.
+        Requires ``flush_timeout`` — without the background thread only
+        ``drain()`` produces responses and waiting here could never
+        succeed."""
+        if self.flush_timeout is None:
+            raise RuntimeError(
+                "collect() needs the background drain thread "
+                "(flush_timeout=...); without it use drain()")
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._cv:
+            while n is not None and len(self._completed) < n:
+                # a dead worker can never produce the missing responses —
+                # raise instead of sleeping out the timeout.  Responses
+                # that already completed stay retrievable: collect(None)
+                # after the error returns them without raising.
+                self._check_worker_error()
+                rem = None if deadline is None \
+                    else deadline - time.perf_counter()
+                if rem is not None and rem <= 0:
+                    break
+                self._cv.wait(timeout=rem)
+            out, self._completed = self._completed, []
+        return out
+
+    def close(self) -> None:
+        """Stop the background drain thread (flushing anything pending
+        first).  Unclosed servers die with the process (daemon thread);
+        no-op without the background thread."""
+        if self._worker is None:
+            return
+        with self._cv:
+            self._stop_flag = True
+            self._cv.notify_all()
+        self._worker.join()
+        self._worker = None
+        self._stop_flag = False
+
+    def __enter__(self) -> "PipelineServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

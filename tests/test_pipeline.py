@@ -51,7 +51,7 @@ def _xdata(rng, shape=(6, 5)):
 # ---------------------------------------------------------------------------
 
 def test_bind_rejects_unknown_port(app):
-    with pytest.raises(PortError, match="no aux port"):
+    with pytest.raises(PortError, match="no input or aux port"):
         AddAux(app).bind(nope=Data({"img": np.zeros((2, 2), np.float32)}))
 
 
@@ -108,11 +108,25 @@ def test_from_graph_detects_cycle(app):
         Pipeline.from_graph(app, [a, b])
 
 
-def test_from_graph_rejects_multiple_inputs(app):
-    a = AddConst(app).bind(infile="in1", outfile="y")
-    b = Scale(app).bind(infile="in2", outfile="z")
-    with pytest.raises(GraphError, match="exactly one input"):
-        Pipeline.from_graph(app, [a, b])
+def test_from_graph_rejects_multiple_anonymous_inputs(app):
+    # two nodes leaving 'in' anonymous cannot be addressed by a run()
+    # mapping; named input edges (a fan-in graph) are fine — see
+    # tests/test_joins.py for the multi-input contract
+    a = AddConst(app)
+    b = Scale(app).bind(params=2.0)
+    with pytest.raises(GraphError, match="anonymous input"):
+        Pipeline.from_graph(app, [a.bind(outfile="y"), b])
+
+
+def test_from_graph_accepts_multiple_named_inputs(app, rng):
+    a = AddConst(app).bind(infile="in1", outfile="y", params=1.0)
+    b = Scale(app).bind(infile="in2", outfile="z", params=3.0)
+    pipe = Pipeline.from_graph(app, [a, b], output="z")
+    assert set(pipe.input_edges) == {"in1", "in2"}
+    d1, d2 = _xdata(rng), _xdata(rng)
+    out = pipe.run({"in1": d1, "in2": d2})
+    np.testing.assert_allclose(out.get_ndarray(0).host,
+                               d2.get_ndarray(0).host * 3.0, rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------
