@@ -15,6 +15,18 @@ sharded over all N devices) and records per-count throughput for hosts
 where the devices are real.  Emits harness CSV rows, a ``BENCH {json}``
 line, and ``BENCH_mesh_scaling.json`` next to this file.
 
+**Skewed-throughput scenario** (``split="proportional"``): forced host
+devices are symmetric, so device asymmetry is EMULATED — per-device speed
+factors (device 0 at 1/4 speed) scale the measured per-device launch
+times, exactly the pool an EngineCL-style proportional split targets.
+The scenario runs REAL per-device pinned launches through the real
+splitter (:class:`repro.launch.mesh.DeviceProfileRegistry` seeded with
+the emulated rates, :meth:`_BatchPlan.device_executable` executables),
+measures each device's isolated per-round wall time, and reports the
+emulated makespan ``sum over rounds of max_d(elapsed_d / factor_d)`` for
+the equal vector vs the proportional vector — plus a bit-identity check
+between the two policies' outputs.
+
     PYTHONPATH=src python -m benchmarks.mesh_scaling
 """
 from __future__ import annotations
@@ -31,6 +43,11 @@ FRAMES, COILS, H, W = 2, 2, 32, 32
 N_DATASETS = 16
 BATCH = 8
 REPS = 5
+
+# skewed scenario: 4 emulated devices, device 0 at quarter speed
+SKEW_DEVICES = 4
+SKEW_FACTORS = (0.25, 1.0, 1.0, 1.0)
+SKEW_REPS = 3
 
 
 def _child(n_devices: int) -> dict:
@@ -87,23 +104,155 @@ def _child(n_devices: int) -> dict:
     }
 
 
+def _skew_child(n_devices: int) -> dict:
+    """Skewed pool: real per-device pinned launches + emulated speed
+    factors.  Equal vs proportional split vectors, emulated makespans,
+    bit-identity between the two policies' outputs."""
+    import jax
+    import numpy as np
+
+    from repro.core import CLapp, KData, XData, split_batched_blob
+    from repro.core.stream import _BatchPlan
+    from repro.launch.mesh import DeviceProfileRegistry
+    from repro.processes import SimpleMRIRecon
+
+    app = CLapp().init()
+    assert len(app.devices) == n_devices
+    devices = app.devices
+    factors = SKEW_FACTORS[:n_devices]
+
+    rng = np.random.default_rng(0)
+    smaps = (rng.standard_normal((COILS, H, W))
+             + 1j * rng.standard_normal((COILS, H, W))).astype(np.complex64)
+    datasets = []
+    for i in range(N_DATASETS):
+        r = np.random.default_rng(100 + i)
+        k = (r.standard_normal((FRAMES, COILS, H, W))
+             + 1j * r.standard_normal((FRAMES, COILS, H, W))).astype(np.complex64)
+        datasets.append(KData({"kdata": k, "sensitivity_maps": smaps}))
+
+    d_in = KData({"kdata": datasets[0].kdata.host.copy(),
+                  "sensitivity_maps": smaps})
+    d_out = XData({"xdata": np.zeros(d_in.x_shape(), np.complex64)})
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    proc = SimpleMRIRecon(app, mode="staged", in_place=False)
+    proc.in_handle = h_in
+    proc.out_handle = h_out
+    proc.init()
+
+    plan = _BatchPlan(proc, BATCH, sharded=True,
+                      split="proportional").init()
+    la = plan.launchable
+    aux = plan.prepare_aux()
+    app.wait_transfers(la.aux_handles)
+    blobs = [d.pack_host() for d in datasets]
+    groups = [blobs[i:i + BATCH] for i in range(0, len(blobs), BATCH)]
+
+    def device_launch(dev, part_rows):
+        """One pinned real launch of ``part_rows`` stacked host blobs on
+        ``dev``; returns (isolated wall seconds, per-item output blobs).
+        min-of-SKEW_REPS to de-noise the shared-CPU timing."""
+        bp = plan.device_executable(dev, len(part_rows))
+        stacked = np.stack(part_rows, axis=0)
+        dev_aux = plan._device_aux(dev, aux)
+        best = float("inf")
+        out = None
+        for _ in range(SKEW_REPS):
+            part = jax.device_put(stacked, bp.batch_sharding)
+            jax.block_until_ready(part)      # time compute, not transfer
+            t0 = time.perf_counter()
+            out = bp((part,), dev_aux)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best, split_batched_blob(out)
+
+    # calibration: isolated per-device seconds/item at the balanced share
+    # (also precompiles the balanced executables outside the timed runs)
+    cal_rows = DeviceProfileRegistry.balanced(BATCH, n_devices)[0]
+    real_spi = []
+    for dev in devices:
+        secs, _ = device_launch(dev, blobs[:cal_rows])
+        real_spi.append(secs / cal_rows)
+
+    # seed the registry with the EMULATED rates (factor / real seconds/item)
+    reg = app.device_profiles
+    for dev, f, spi in zip(devices, factors, real_spi):
+        reg.set_rate(dev, f / spi)
+    vec_prop = reg.split(BATCH, devices)
+    vec_equal = DeviceProfileRegistry.balanced(BATCH, n_devices)
+
+    def run_policy(vec):
+        """All groups through per-device pinned launches carved by ``vec``;
+        emulated makespan = sum over rounds of max_d(elapsed_d/factor_d)."""
+        makespan, outs = 0.0, []
+        for group in groups:
+            padded = group + [group[-1]] * (BATCH - len(group))
+            round_times, round_items = [], []
+            off = 0
+            for dev, c, f in zip(devices, vec, factors):
+                if c == 0:
+                    continue
+                secs, items = device_launch(dev, padded[off:off + c])
+                off += c
+                round_times.append(secs / f)
+                round_items.extend(items)
+            makespan += max(round_times)
+            outs.extend(round_items[:len(group)])
+        return makespan, outs
+
+    t_equal, out_equal = run_policy(vec_equal)
+    t_prop, out_prop = run_policy(vec_prop)
+    # correctness: identical math either way.  Bitwise equality holds for
+    # batch-size-invariant programs (every elementwise kernel; asserted in
+    # tests/); XLA's FFT picks per-batch-size algorithms, so the recon is
+    # compared at rtol 1e-6 — the SAME caveat the equal split's ragged-tail
+    # executable already has.
+    from repro.core.arena import unpack_host
+    bit_identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(out_equal, out_prop))
+    max_abs_diff = 0.0
+    allclose = True
+    for a, b in zip(out_equal, out_prop):
+        xa = unpack_host(np.asarray(a), la.out_layout)["xdata"]
+        xb = unpack_host(np.asarray(b), la.out_layout)["xdata"]
+        max_abs_diff = max(max_abs_diff, float(np.max(np.abs(xa - xb))))
+        allclose = allclose and np.allclose(xa, xb, rtol=1e-6, atol=1e-6)
+    return {
+        "devices": n_devices,
+        "factors": list(factors),
+        "real_s_per_item": [round(s, 6) for s in real_spi],
+        "vec_equal": list(vec_equal),
+        "vec_proportional": list(vec_prop),
+        "emulated_makespan_equal_s": round(t_equal, 5),
+        "emulated_makespan_proportional_s": round(t_prop, 5),
+        "speedup_proportional_vs_equal": round(t_equal / t_prop, 3),
+        "bit_identical": bool(bit_identical),
+        "allclose_rtol1e6": bool(allclose),
+        "max_abs_diff": max_abs_diff,
+    }
+
+
+def _run_child(n: int, flag: str) -> dict:
+    """One forced-device-count subprocess point (``--child`` or
+    ``--skew-child``)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={n}").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.mesh_scaling", flag, str(n)],
+        env=env, capture_output=True, text=True, timeout=600, cwd=root)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"mesh_scaling child ({flag} n={n}) failed:\n{r.stdout}\n{r.stderr}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
 def rows() -> List[str]:
-    points = []
-    for n in DEVICE_COUNTS:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                            + f" --xla_force_host_platform_device_count={n}").strip()
-        src = os.path.join(
-            os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
-        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-        r = subprocess.run(
-            [sys.executable, "-m", "benchmarks.mesh_scaling", "--child", str(n)],
-            env=env, capture_output=True, text=True, timeout=600,
-            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-        if r.returncode != 0:
-            raise RuntimeError(
-                f"mesh_scaling child (n={n}) failed:\n{r.stdout}\n{r.stderr}")
-        points.append(json.loads(r.stdout.strip().splitlines()[-1]))
+    points = [_run_child(n, "--child") for n in DEVICE_COUNTS]
 
     base = points[0]["streamed_s"]
     out_rows = []
@@ -116,6 +265,14 @@ def rows() -> List[str]:
             f"sets_per_s={p['sets_per_s']};"
             f"speedup_vs_1dev={p['speedup_vs_1dev']}")
 
+    skewed = _run_child(SKEW_DEVICES, "--skew-child")
+    out_rows.append(
+        f"mesh_skewed_{skewed['devices']}dev_proportional,"
+        f"{skewed['emulated_makespan_proportional_s'] / N_DATASETS * 1e6:.1f},"
+        f"makespan_equal_s={skewed['emulated_makespan_equal_s']};"
+        f"speedup_vs_equal={skewed['speedup_proportional_vs_equal']};"
+        f"allclose={skewed['allclose_rtol1e6']}")
+
     bench = {
         "name": "mesh_scaling",
         "n_datasets": N_DATASETS, "batch": BATCH,
@@ -123,6 +280,7 @@ def rows() -> List[str]:
         "points": points,
         "all_devices_used": all(
             p["devices_used"] == p["devices"] for p in points),
+        "skewed": skewed,
     }
     print("BENCH " + json.dumps(bench))
     out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -136,6 +294,10 @@ def main() -> None:
     if "--child" in sys.argv:
         n = int(sys.argv[sys.argv.index("--child") + 1])
         print(json.dumps(_child(n)))
+        return
+    if "--skew-child" in sys.argv:
+        n = int(sys.argv[sys.argv.index("--skew-child") + 1])
+        print(json.dumps(_skew_child(n)))
         return
     print("name,us_per_call,derived")
     for r in rows():

@@ -1,7 +1,8 @@
 """repro.core — the paper's contribution as a composable JAX module.
 
 Public API mirrors OpenCLIPER's class names (CLapp, Data, XData, KData,
-NDArray, Process) with JAX/TPU semantics.  See DESIGN.md §2 for the mapping.
+NDArray, Process) with JAX/TPU semantics.  See the paper->JAX concept map
+in README.md and the layer guide in docs/architecture.md.
 """
 from .app import (
     CLapp,
@@ -43,7 +44,7 @@ from .process import (
 )
 from .graph import GraphError, Node, Pipeline
 from .registry import KernelCompileError, KernelEntry, KernelRegistry, kernel
-from .stream import BatchedProcess, StreamQueue, stream_launch
+from .stream import BatchedProcess, SplitBatch, StreamQueue, stream_launch
 from .sync import Coherence, SyncSource
 
 __all__ = [
@@ -53,7 +54,8 @@ __all__ = [
     "KData", "KernelCompileError", "KernelEntry", "KernelRegistry",
     "NDArray", "Node", "NoMatchingDeviceError", "Pipeline", "PlatformTraits",
     "Port", "PortError", "Process", "ProcessChain", "ProfileParameters",
-    "PureLaunchable", "StreamQueue", "SyncSource", "XData", "aot_compile",
+    "PureLaunchable", "SplitBatch", "StreamQueue", "SyncSource", "XData",
+    "aot_compile",
     "batched_spec", "compile_cache_stats", "device_view", "kernel",
     "pack_device", "pack_host", "pack_tree_host", "plan_layout",
     "split_batched_blob", "stack_host_blobs", "stream_launch",

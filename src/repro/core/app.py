@@ -1,9 +1,29 @@
 """CLapp — the application/device-management object (paper §III-B).
 
 Owns: device discovery & selection by traits, the data registry
-(handle -> Data, device-resident arena blobs), the kernel registry, and the
-optional device mesh for distributed execution.  This is the single place
-where "housekeeping" lives, exactly as in the paper.
+(handle -> Data, device-resident arena blobs), the kernel registry, the
+``("data", "model")`` device mesh built over the selected devices, and the
+per-device throughput profiles (:attr:`CLapp.device_profiles`) that drive
+throughput-proportional batch splitting.  This is the single place where
+"housekeeping" lives, exactly as in the paper: ``init()`` selects devices
+in one call, and everything downstream — transfers (``host2device`` places
+via ``NamedSharding``), launches, sharded streaming, proportional splits —
+is device-count-agnostic.
+
+Operators are wired to Data declaratively: ``Process.bind(...)`` maps
+typed ports to named edges and :class:`~repro.core.graph.Pipeline`
+composes, validates, and runs the graph in all three execution modes (see
+:mod:`repro.core.graph` and ``docs/pipeline.md``).  Handles registered
+with :meth:`CLapp.addData` remain the currency between operators and the
+arena — the Pipeline plumbs them for you.
+
+Throughput profiles: :attr:`device_profiles` is a
+:class:`repro.launch.mesh.DeviceProfileRegistry` recording measured
+items/sec per selected device.  The streaming executor's
+``split="proportional"`` policy records into it on every launch (warmup
+batches run balanced while the profiles are cold) and reads it back to
+carve each stacked batch proportionally to what the devices actually
+deliver; see :mod:`repro.core.stream` and ``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -71,6 +91,12 @@ class CLapp:
         self._data: Dict[DataHandle, Data] = {}
         self._next_handle: DataHandle = 0
         self.kernels = KernelRegistry()
+        # measured per-device throughput (items/sec), fed by the streaming
+        # executor's proportional-split launches and read back to carve the
+        # next batch; survives re-init (profiles are keyed by device id, so
+        # deselected devices simply stop being consulted)
+        from repro.launch.mesh import DeviceProfileRegistry  # lazy: keep core light
+        self.device_profiles = DeviceProfileRegistry()
         self._initialized = False
         # handle -> coherence state to settle into once the dispatched
         # host->device transfer lands (see host2device(wait=False))

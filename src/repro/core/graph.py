@@ -708,6 +708,7 @@ class Pipeline:
     def run(self, inputs: Any = None, *, mode: str = "launch",
             batch: int = 1, sharded: bool = False, depth: int = 2,
             sync: bool = True, tail_waste_threshold: float = 0.5,
+            split: str = "equal",
             profile: Optional[ProfileParameters] = None) -> Any:
         """Route the validated graph through one of three execution modes.
 
@@ -727,8 +728,12 @@ class Pipeline:
         edge is batched independently and the per-edge batches are zipped
         row-aligned into one joined launch.
 
-        ``batch``/``sharded``/``depth``/``tail_waste_threshold`` apply to
-        the stream and serve modes (see :meth:`Process.stream`).  With
+        ``batch``/``sharded``/``depth``/``tail_waste_threshold``/``split``
+        apply to the stream and serve modes (see :meth:`Process.stream`;
+        ``split="proportional"`` carves each stacked batch over the mesh
+        devices proportionally to their measured throughput, falling back
+        to the equal split while the ``app.device_profiles`` registry is
+        cold).  With
         ``sync=True`` (default) results are copied back to host arrays;
         otherwise they stay device-fresh.  All three modes execute the SAME
         compiled per-item computation — outputs are bit-identical across
@@ -771,13 +776,14 @@ class Pipeline:
             return built.executor.stream(
                 items, batch=batch, depth=depth, sync=sync,
                 sharded=sharded, tail_waste_threshold=tail_waste_threshold,
-                profile=profile)
+                split=split, profile=profile)
         if mode == "serve":
             requests = list(inputs or ())
             if not requests:
                 return []
             server = self.serve(batch=batch, sharded=sharded, depth=depth,
-                                tail_waste_threshold=tail_waste_threshold)
+                                tail_waste_threshold=tail_waste_threshold,
+                                split=split)
             rids = [server.submit(d) for d in requests]
             by_rid = {r.rid: r for r in server.drain()}
             outs = []
@@ -793,20 +799,22 @@ class Pipeline:
                          "'launch' | 'stream' | 'serve'")
 
     def serve(self, *, batch: int = 8, sharded: bool = False, depth: int = 2,
-              tail_waste_threshold: float = 0.5,
+              tail_waste_threshold: float = 0.5, split: str = "equal",
               flush_timeout: Optional[float] = None):
         """A standing request/response loop over this pipeline (admission
         queue -> dynamic batcher -> batched (sharded) joined launches); see
         :class:`repro.serve.pipeline.PipelineServer`.  ``flush_timeout``
         (seconds) enables the background drain thread: a partial batch is
         flushed once its oldest request has waited that long instead of
-        waiting for a full batch."""
+        waiting for a full batch.  ``split="proportional"`` carves each
+        served batch over the mesh devices by measured throughput (see
+        :meth:`Process.stream`)."""
         from repro.serve.pipeline import PipelineServer  # lazy: serve layer
 
         return PipelineServer(self, batch=batch, sharded=sharded,
                               depth=depth,
                               tail_waste_threshold=tail_waste_threshold,
-                              flush_timeout=flush_timeout)
+                              split=split, flush_timeout=flush_timeout)
 
     @staticmethod
     def _copy_into(dst: Data, src: Data, *, edge: str = "?") -> None:

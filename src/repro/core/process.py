@@ -655,7 +655,7 @@ class Process:
     # -- streaming (beyond paper; see repro.core.stream) -----------------------
     def stream(self, datasets: Sequence[Any], batch: int = 1, *,
                depth: int = 2, sync: bool = False, sharded: bool = False,
-               tail_waste_threshold: float = 0.5,
+               tail_waste_threshold: float = 0.5, split: str = "equal",
                profile: ProfileParameters | None = None) -> List[Any]:
         """Run many independent input Data sets through this process.
 
@@ -680,6 +680,16 @@ class Process:
         bit-identical and each item's output stays on the device that
         computed it.  Requires ``batch`` divisible by the device count.
 
+        ``split`` picks the batch-carving policy under ``sharded=True``:
+        ``"equal"`` (default) gives every device the same number of rows
+        via one mesh-sharded launch; ``"proportional"`` carves each batch
+        into per-device sub-batches sized by the measured items/sec in
+        ``app.device_profiles`` — self-calibrating (every launch refines
+        the rates), falling back to an equal/balanced carve while profiles
+        are cold or the batch is too small to matter, and lifting the
+        batch-divisibility requirement.  Outputs are bit-identical either
+        way; see the :mod:`repro.core.stream` module docstring.
+
         Ragged tail: when the final batch has fewer than ``batch`` items
         and the padding waste fraction exceeds ``tail_waste_threshold``, a
         second, smaller executable is compiled for the tail instead of
@@ -691,7 +701,7 @@ class Process:
         return stream_launch(self, datasets, batch=batch, depth=depth,
                              sync=sync, sharded=sharded,
                              tail_waste_threshold=tail_waste_threshold,
-                             profile=profile)
+                             split=split, profile=profile)
 
 
 class ProcessChain(Process):

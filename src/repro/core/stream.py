@@ -81,9 +81,46 @@ ONLY device-count-dependent call the user makes).  The contract:
   bit-identical to sequential ``launch()`` — items never interact.
 * **Fallback** — ``sharded=False`` (default) and single-device apps keep
   the exact pre-mesh behaviour: everything on ``app.device``.
+
+Throughput-proportional splits (``split="proportional"``)
+---------------------------------------------------------
+
+The equal ``NamedSharding`` split above gives every device the same number
+of rows — which wastes the fast devices whenever the pool is asymmetric
+(CPU+GPU co-execution, thermally throttled chips, shared hosts).  With
+``split="proportional"`` (requires ``sharded=True``) the executor carves
+each stacked batch into **per-device sub-batches sized by measured
+throughput** instead:
+
+* The owning app's :class:`~repro.launch.mesh.DeviceProfileRegistry`
+  (``app.device_profiles``) holds an items/sec estimate per device.
+  :meth:`_BatchPlan.stack_group` asks it for a split vector ONCE per item
+  group — so in a fan-in join **every edge shares one split vector** and
+  row alignment across edges is preserved by construction.
+* While profiles are **cold** (or the batch is too small to matter, or
+  every rate is zero) the plan falls back to the balanced vector — the
+  first batch is the warmup launch that populates the registry.
+* Each sub-batch is ``device_put`` to its device and launched through a
+  per-device executable (compiled once per ``(device, rows)`` via the
+  global compile cache); dispatch is asynchronous, so all devices compute
+  concurrently, each on exactly the rows the registry assigned it.  A
+  zero-rate device receives zero rows and is skipped entirely.
+* A per-device completion timer records every launch's items/sec back
+  into the registry (the live ``ProfileParameters`` samples), so the
+  split **self-calibrates** batch over batch.
+* Because the vmapped program computes items independently, outputs are
+  **bit-identical** to the equal split (and to sequential ``launch()``)
+  in all three modes for batch-size-invariant programs — every
+  elementwise kernel; only the placement of work changes.  Programs
+  whose XLA lowering picks batch-size-dependent algorithms (the FFT)
+  match at rtol 1e-6 instead — the same caveat the ragged-tail
+  executable already carries.  Uneven row counts are legal here: the
+  per-device executables carry an explicit split vector, so neither the
+  batch size nor a ragged tail needs to divide the device count.
 """
 from __future__ import annotations
 
+import threading
 import time
 import weakref
 from collections import deque
@@ -109,10 +146,13 @@ class StreamQueue:
     the transfer of item *i+depth*.  ``depth=2`` is classic double
     buffering; larger depths trade memory for more dispatch-ahead slack.
 
-    ``device`` may be a :class:`jax.Device` OR a :class:`jax.sharding.
+    ``device`` may be a :class:`jax.Device`, a :class:`jax.sharding.
     Sharding` — the sharded streaming path passes ``NamedSharding(mesh,
     P("data"))`` so every dispatched stacked batch is scattered across the
-    mesh's ``data`` axis in the same single ``device_put`` call.
+    mesh's ``data`` axis in the same single ``device_put`` call — or a
+    **callable placement** ``item -> device batch`` (the proportional
+    split path passes :meth:`_BatchPlan.place`, which carves each stacked
+    host blob into per-device sub-batches as a :class:`SplitBatch`).
     """
 
     def __init__(self, items: Iterable[np.ndarray], device=None, depth: int = 2):
@@ -120,6 +160,8 @@ class StreamQueue:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self._it = iter(items)
         self._device = device
+        self._place = device if callable(device) else \
+            (lambda item: jax.device_put(item, device))
         self._depth = depth
         self._fifo: deque = deque()
         self._exhausted = False
@@ -145,7 +187,7 @@ class StreamQueue:
             except StopIteration:
                 self._exhausted = True
                 return
-            blob = jax.device_put(item, self._device)
+            blob = self._place(item)
             self._fifo.append(blob)
             self._issued.append(weakref.ref(blob))
             self.transfers += 1
@@ -190,6 +232,61 @@ def _is_deleted(blob: jax.Array) -> bool:
         return False
 
 
+def _single_device_mesh(device: jax.Device) -> jax.sharding.Mesh:
+    """A trivial ``(data, model)`` mesh holding one device — the compile
+    target of per-device pinned executables (mirrors
+    ``CLapp.default_sharding``'s mesh shape so fingerprints stay uniform)."""
+    return jax.sharding.Mesh(
+        np.array([[device]], dtype=object), ("data", "model"))
+
+
+class _SplitStack:
+    """One edge's stacked HOST blob plus the per-device split vector its
+    group was assigned.  Produced by :meth:`_BatchPlan.stack_group` in
+    proportional mode — the vector is decided once per item group, so
+    every edge of a join carries the SAME vector (row alignment across
+    edges survives the uneven carve by construction)."""
+
+    __slots__ = ("blob", "split")
+
+    def __init__(self, blob: np.ndarray, split: Tuple[int, ...]):
+        self.blob = blob
+        self.split = split
+
+
+class SplitBatch:
+    """Per-device parts of one proportionally-split stacked batch.
+
+    ``parts[j]`` is a ``(counts[j], total_bytes)`` blob resident on
+    ``devices[j]`` (zero-count devices are omitted); concatenating the
+    parts in order restores the items in stream order.  Quacks enough
+    like a stacked ``jax.Array`` for the queue bookkeeping: ``shape``,
+    ``is_deleted`` and ``block_until_ready`` (the latter is what
+    ``jax.block_until_ready`` calls on non-array leaves).
+    """
+
+    # __weakref__: StreamQueue tracks issued batches by weak reference
+    __slots__ = ("parts", "counts", "devices", "__weakref__")
+
+    def __init__(self, parts: Sequence[jax.Array], counts: Sequence[int],
+                 devices: Sequence[jax.Device]):
+        self.parts = tuple(parts)
+        self.counts = tuple(int(c) for c in counts)
+        self.devices = tuple(devices)
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (sum(self.counts), int(self.parts[0].shape[1]))
+
+    def is_deleted(self) -> bool:
+        return all(_is_deleted(p) for p in self.parts)
+
+    def block_until_ready(self) -> "SplitBatch":
+        for p in self.parts:
+            jax.block_until_ready(p)
+        return self
+
+
 class BatchedProcess:
     """A process AOT-compiled once for a leading batch axis.
 
@@ -207,14 +304,24 @@ class BatchedProcess:
     edge's rows co-located item-wise (row i of every edge lands on the
     same device — a join never shuffles items across devices).  The batch
     size must be divisible by the ``data``-axis size.
+
+    ``device=...`` instead pins the whole batched program to ONE device
+    (a trivial single-device mesh): the proportional-split plan compiles
+    one of these per ``(device, rows)`` so each device can carry a
+    different share of a batch.  Mutually exclusive with ``sharded``.
     """
 
-    def __init__(self, process, batch: int, *, sharded: bool = False):
+    def __init__(self, process, batch: int, *, sharded: bool = False,
+                 device: Optional[jax.Device] = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
+        if sharded and device is not None:
+            raise ValueError("sharded=True and device= are mutually "
+                             "exclusive (a pinned program spans one device)")
         self.process = process
         self.batch = batch
         self.sharded = sharded
+        self.device = device
         #: placement of stacked input batches (None = primary device); set
         #: by init() and reused by stream_launch as the StreamQueue target
         #: for every input edge
@@ -234,7 +341,20 @@ class BatchedProcess:
         specs = [batched_spec(lay, self.batch) for lay in la.in_layouts]
         specs += p._aux_specs(la)
         in_shardings = out_shardings = None
-        if self.sharded:
+        mesh = app.mesh
+        if self.device is not None:
+            # pinned single-device program: compile under a trivial mesh
+            # holding only that device, everything replicated on it.  The
+            # mesh/sharding fingerprints in the compile cache key keep one
+            # executable per (device, rows) — they never collide with the
+            # mesh-sharded or default-placement variants.
+            mesh = _single_device_mesh(self.device)
+            pinned = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            self.batch_sharding = pinned
+            in_shardings = (pinned,) * (n_in + len(la.aux_handles))
+            out_shardings = pinned
+        elif self.sharded:
             mesh = app.mesh
             if mesh is None:
                 raise RuntimeError(
@@ -257,7 +377,7 @@ class BatchedProcess:
             donate_argnums=(la.donate_idx,) if la.donate_idx is not None
             else (),
             static_key=(la.static_key, _layout_fingerprint(app, la)),
-            mesh=app.mesh,
+            mesh=mesh,
             in_shardings=in_shardings,
             out_shardings=out_shardings,
         )
@@ -280,35 +400,105 @@ class BatchedProcess:
 
 
 class _BatchPlan:
-    """Main batch executable + ragged-tail policy (see module docstring).
+    """Batch executables + ragged-tail policy + split policy (see module
+    docstring).
 
     ``launch_rows(rows)`` decides how many rows the final stacked blob
     should carry: the full ``batch`` (pad by repetition) or exactly
     ``rows`` (compile a second, smaller executable).  ``executable(rows)``
     returns the matching :class:`BatchedProcess`; tail executables are
     built lazily and cached per size (backed by the global compile cache).
+
+    ``split="proportional"`` (requires ``sharded=True``) replaces the
+    single mesh-sharded executable with per-device pinned executables:
+    :meth:`stack_group` asks the app's
+    :class:`~repro.launch.mesh.DeviceProfileRegistry` for a split vector
+    once per item group (balanced while profiles are cold), :meth:`place`
+    carves each edge's stacked host blob accordingly, and
+    :meth:`launch` dispatches one pinned launch per device — recording
+    every device's completion time back into the registry so the split
+    self-calibrates.  Outputs are bit-identical to the equal split.
     """
 
     def __init__(self, process, batch: int, *, sharded: bool = False,
-                 tail_waste_threshold: float = 0.5):
+                 tail_waste_threshold: float = 0.5, split: str = "equal"):
+        if split not in ("equal", "proportional"):
+            raise ValueError(
+                f"unknown split policy {split!r}: expected 'equal' | "
+                "'proportional'")
+        if split == "proportional" and not sharded:
+            raise ValueError(
+                "split='proportional' needs sharded=True — proportional "
+                "batch carving distributes work over the app mesh's data-"
+                "axis devices")
         self.process = process
         self.batch = batch
         self.sharded = sharded
+        self.split = split
         self.tail_waste_threshold = float(tail_waste_threshold)
         self.main = BatchedProcess(process, batch, sharded=sharded)
         self._tails: dict = {}
+        # proportional state: the data-axis devices, the per-(device, rows)
+        # pinned executables, per-device aux replicas, and the live
+        # completion-timer threads feeding the registry
+        self._devices: Tuple[jax.Device, ...] = ()
+        self._la: Optional[PureLaunchable] = None
+        self._pinned: dict = {}
+        self._device_aux_cache: dict = {}
+        self._base_aux: Optional[List[jax.Array]] = None
+        self._timers: List[Any] = []
+
+    @property
+    def proportional(self) -> bool:
+        return self.split == "proportional"
 
     def init(self) -> "_BatchPlan":
-        self.main.init()
+        if not self.proportional:
+            self.main.init()
+            return self
+        # proportional mode never compiles the mesh-wide executable; it
+        # resolves the launchable + data-axis devices and precompiles the
+        # balanced full-batch executables (the cold-start warmup set)
+        p = self.process
+        app = p.getApp()
+        mesh = app.mesh
+        if mesh is None:
+            raise RuntimeError(
+                "split='proportional' needs the app mesh (CLapp.init "
+                "builds one over the selected devices)")
+        other = {a: int(s) for a, s in mesh.shape.items()
+                 if a != "data" and int(s) != 1}
+        if other:
+            raise ValueError(
+                "split='proportional' needs a pure data-parallel mesh; "
+                f"axes {sorted(other)} are non-trivial")
+        for name in p.kernel_names:
+            app.kernels.load(name)
+        self._devices = tuple(mesh.devices.flat)
+        self._la = p.launchable()
+        self.precompile(self.batch)
         return self
 
     @property
     def launchable(self) -> PureLaunchable:
-        return self.main.launchable
+        return self._la if self.proportional else self.main.launchable
 
     @property
     def batch_sharding(self):
-        return self.main.batch_sharding
+        return None if self.proportional else self.main.batch_sharding
+
+    @property
+    def queue_target(self):
+        """What the per-edge :class:`StreamQueue` s place batches with:
+        the proportional placement callable, the mesh sharding, or the
+        primary device."""
+        if self.proportional:
+            return self.place
+        return self.main.batch_sharding or self.process.getApp().device
+
+    @property
+    def registry(self):
+        return self.process.getApp().device_profiles
 
     def _data_axis(self) -> int:
         mesh = self.process.getApp().mesh
@@ -321,11 +511,17 @@ class _BatchPlan:
         waste = (self.batch - rows) / self.batch
         if waste <= self.tail_waste_threshold:
             return self.batch                      # cheap enough: pad
+        if self.proportional:
+            return rows                 # uneven carve: any row count works
         if self.sharded and rows % self._data_axis() != 0:
             return self.batch                      # devices need whole items
         return rows                                # compile a tail executable
 
     def executable(self, rows: int) -> BatchedProcess:
+        if self.proportional:
+            raise RuntimeError(
+                "proportional plans have no single batch executable; use "
+                "launch()/precompile() (per-device pinned executables)")
         if rows == self.batch:
             return self.main
         bp = self._tails.get(rows)
@@ -335,17 +531,182 @@ class _BatchPlan:
             self._tails[rows] = bp
         return bp
 
+    def precompile(self, rows: int) -> None:
+        """Build whatever executable(s) a ``rows``-item group will need
+        BEFORE the launch loop: the (tail) batch executable, or —
+        proportional — the pinned per-device executables of the CURRENT
+        split vector (balanced fallback + today's measured vector).  For
+        the equal split this makes compilation never stall the launch
+        loop; under proportional splits the registry keeps refining, so a
+        batch whose vector shifted since the last precompile can still
+        compile lazily inside the loop — the EMA converges quickly and
+        each (device, rows) pair compiles at most once (global cache), so
+        the cost amortizes away but is not strictly zero."""
+        rows = self.launch_rows(rows)
+        if not self.proportional:
+            self.executable(rows)
+            return
+        from repro.launch.mesh import DeviceProfileRegistry
+        vectors = {DeviceProfileRegistry.balanced(rows, len(self._devices)),
+                   self.split_vector(rows)}
+        for vec in vectors:
+            for dev, c in zip(self._devices, vec):
+                if c:
+                    self.device_executable(dev, c)
+
+    def device_executable(self, device: jax.Device, rows: int
+                          ) -> BatchedProcess:
+        """The pinned executable running ``rows`` items on ``device``
+        (lazy; backed by the global compile cache)."""
+        key = (device.id, rows)
+        bp = self._pinned.get(key)
+        if bp is None:
+            bp = BatchedProcess(self.process, rows, device=device).init()
+            self._pinned[key] = bp
+        return bp
+
+    def split_vector(self, rows: int) -> Tuple[int, ...]:
+        """The per-device row counts for one ``rows``-item group: measured-
+        proportional when the registry is warm, balanced otherwise (the
+        cold/small-batch fallback).  A device explicitly measured/seeded at
+        rate 0 (the "broken accelerator stays in the pool" case) is
+        excluded from the balanced fallback too — only if EVERY device is
+        zero-rated (degenerate) does the balance span the full pool."""
+        devices = self._devices
+        vec = self.registry.split(rows, devices)
+        if vec is not None:
+            return vec
+        from repro.launch.mesh import DeviceProfileRegistry
+        rates = self.registry.rates(devices)
+        usable = [i for i, r in enumerate(rates) if r != 0]   # nan: usable
+        if not usable:
+            usable = list(range(len(devices)))
+        balanced = DeviceProfileRegistry.balanced(rows, len(usable))
+        out = [0] * len(devices)
+        for i, c in zip(usable, balanced):
+            out[i] = c
+        return tuple(out)
+
     def stack_group(self, items: Sequence[Tuple[np.ndarray, ...]]
-                    ) -> List[np.ndarray]:
+                    ) -> List[Any]:
         """Stacked per-edge host blobs for one row-aligned group of items
         (each a per-edge blob tuple): ``launch_rows`` decides the row
         count, padding repeats the last item.  The one place the group ->
         stacked-batch policy lives: :class:`_JoinFeed` (stream + manual
-        serve drain) and the background serve flush both call it."""
+        serve drain) and the background serve flush both call it.  In
+        proportional mode the split vector is ALSO decided here — once per
+        group — and attached to every edge's stack, so a join's edges can
+        never disagree on the carve."""
         rows = self.launch_rows(len(items))
-        return [
+        stacks = [
             stack_host_blobs(_pad_rows([it[e] for it in items], rows), lay)
             for e, lay in enumerate(self.launchable.in_layouts)]
+        if not self.proportional:
+            return stacks
+        split = self.split_vector(rows)
+        return [_SplitStack(s, split) for s in stacks]
+
+    # ---------------------------------------------------- placement + launch
+    def place(self, item: Any) -> Any:
+        """Place one edge's stacked host blob: a plain array goes to the
+        plan's sharding/device in one ``device_put``; a
+        :class:`_SplitStack` is carved into per-device sub-batches (one
+        async ``device_put`` per device with a non-zero share)."""
+        if not isinstance(item, _SplitStack):
+            target = self.batch_sharding or self.process.getApp().device
+            return jax.device_put(item, target)
+        parts, counts, devices = [], [], []
+        off = 0
+        for dev, c in zip(self._devices, item.split):
+            if c:
+                sharding = self.device_executable(dev, c).batch_sharding
+                parts.append(jax.device_put(item.blob[off:off + c], sharding))
+                counts.append(c)
+                devices.append(dev)
+            off += c
+        return SplitBatch(parts, counts, devices)
+
+    def launch(self, dev_blobs: Sequence[Any],
+               aux_blobs: Sequence[jax.Array]) -> Any:
+        """One batched launch for one group: the single (sharded)
+        executable for plain stacked blobs, or one pinned launch per
+        device for a :class:`SplitBatch` — dispatched asynchronously so
+        the devices compute concurrently, with a completion timer per
+        device feeding measured items/sec back into the registry."""
+        if not isinstance(dev_blobs[0], SplitBatch):
+            return self.executable(int(dev_blobs[0].shape[0]))(
+                tuple(dev_blobs), aux_blobs)
+        sb0 = dev_blobs[0]
+        out_parts = []
+        for j, (dev, c) in enumerate(zip(sb0.devices, sb0.counts)):
+            bp = self.device_executable(dev, c)       # may compile (cached)
+            aux = self._device_aux(dev, aux_blobs)
+            t0 = time.perf_counter()
+            out = bp(tuple(sb.parts[j] for sb in dev_blobs), aux)
+            out_parts.append(out)
+            self._time_completion(dev, c, t0, out)
+        return SplitBatch(out_parts, sb0.counts, sb0.devices)
+
+    def split_output(self, out: Any) -> List[jax.Array]:
+        """Per-item output blobs of one launched group, in item order."""
+        if not isinstance(out, SplitBatch):
+            return split_batched_blob(out)
+        items: List[jax.Array] = []
+        for part in out.parts:
+            items.extend(split_batched_blob(part))
+        return items
+
+    def prepare_aux(self) -> List[jax.Array]:
+        """Device aux blobs for this plan's launches (see
+        :func:`_prepare_aux`).  Proportional plans keep the aux at its
+        stored placement and replicate per device lazily —
+        :meth:`_device_aux` — instead of mesh-replicating up front."""
+        app = self.process.getApp()
+        self._base_aux = _prepare_aux(
+            app, self.launchable, self.sharded and not self.proportional)
+        return self._base_aux
+
+    def _device_aux(self, device: jax.Device,
+                    aux_blobs: Sequence[jax.Array]) -> Tuple[jax.Array, ...]:
+        """Aux blobs replicated onto one device (cached per device)."""
+        if not aux_blobs:
+            return ()
+        cached = self._device_aux_cache.get(device.id)
+        if cached is None:
+            sharding = jax.sharding.NamedSharding(
+                _single_device_mesh(device), jax.sharding.PartitionSpec())
+            cached = tuple(jax.device_put(b, sharding) for b in aux_blobs)
+            self._device_aux_cache[device.id] = cached
+        return cached
+
+    # -------------------------------------------------- live rate recording
+    def _time_completion(self, device: jax.Device, items: int, t0: float,
+                         out: jax.Array) -> None:
+        """Record ``items / (ready - t0)`` into the registry once this
+        device's output is ready — from a daemon thread, so the dispatch
+        loop (and the double buffer) never blocks on a timer."""
+        registry = self.registry
+
+        def timer():
+            jax.block_until_ready(out)
+            registry.record(device, items, time.perf_counter() - t0)
+
+        t = threading.Thread(target=timer, name="device-profile-timer",
+                             daemon=True)
+        t.start()
+        # prune finished timers on every append so the list stays bounded
+        # by in-flight launches, not stream length (long-lived proportional
+        # servers spawn one timer per device per flush, forever)
+        self._timers = [x for x in self._timers if x.is_alive()]
+        self._timers.append(t)
+
+    def join_timers(self, timeout: Optional[float] = None) -> None:
+        """Wait for outstanding completion timers (callers that already
+        blocked on the results pay ~nothing; async callers should skip
+        this — the timers record on their own)."""
+        for t in self._timers:
+            t.join(timeout)
+        self._timers = [t for t in self._timers if t.is_alive()]
 
 
 def _host_blob_of(data: Data) -> np.ndarray:
@@ -494,31 +855,33 @@ def _prepare_aux(app, la: PureLaunchable, sharded: bool) -> List[jax.Array]:
 
 def stream_launch(process, datasets: Sequence[Any], *, batch: int = 1,
                   depth: int = 2, sync: bool = False, sharded: bool = False,
-                  tail_waste_threshold: float = 0.5,
+                  tail_waste_threshold: float = 0.5, split: str = "equal",
                   profile: ProfileParameters | None = None) -> List[Data]:
     """Run ``datasets`` through ``process`` batched + double-buffered.
 
     See :meth:`repro.core.process.Process.stream` for the public contract
     (including multi-input items: one Data per input edge, as a mapping or
     tuple), the module docstring for the ``sharded=True`` placement
-    contract, the per-edge join feeds and the ragged-tail policy
-    (``tail_waste_threshold``).
+    contract, the per-edge join feeds, the ragged-tail policy
+    (``tail_waste_threshold``) and the ``split="proportional"`` batch-
+    carving policy.
     """
     datasets = list(datasets)
     if not datasets:
         return []
     app = process.getApp()
     plan = _BatchPlan(process, batch, sharded=sharded,
-                      tail_waste_threshold=tail_waste_threshold).init()
+                      tail_waste_threshold=tail_waste_threshold,
+                      split=split).init()
     la = plan.launchable
 
-    aux_blobs = _prepare_aux(app, la, sharded)
+    aux_blobs = plan.prepare_aux()
 
     tail = len(datasets) % batch
     if tail:
-        # compile the tail executable (if the policy wants one) BEFORE the
-        # launch loop, so compilation never stalls the double buffer
-        plan.executable(plan.launch_rows(tail))
+        # compile the tail executable(s) (if the policy wants them) BEFORE
+        # the launch loop, so compilation never stalls the double buffer
+        plan.precompile(tail)
 
     # one row-aligned feed per input edge — a multi-input launchable gets
     # per-edge StreamQueues whose batches are zipped before each launch.
@@ -537,23 +900,22 @@ def stream_launch(process, datasets: Sequence[Any], *, batch: int = 1,
             yield buf
 
     feed = _JoinFeed(plan, groups())
-    target = plan.batch_sharding or app.device
-    queues = [StreamQueue(feed.feed(e), device=target, depth=depth)
+    queues = [StreamQueue(feed.feed(e), device=plan.queue_target, depth=depth)
               for e in range(la.n_inputs)]
     t0 = time.perf_counter()
-    out_batches: List[jax.Array] = []
+    out_batches: List[Any] = []
     for dev_blobs in zip(*queues):    # batch i+1 transfers while i computes
-        bp = plan.executable(int(dev_blobs[0].shape[0]))
-        out_batches.append(bp(dev_blobs, aux_blobs))
+        out_batches.append(plan.launch(dev_blobs, aux_blobs))
     # settle the aux uploads' coherence bookkeeping: by now every launch has
     # consumed the aux blobs, so this only waits on the transfers themselves
     app.wait_transfers(la.aux_handles)
 
     # per-item output blobs: rows sliced shard-locally, so with sharded=True
-    # each item's result stays on the device that computed it
+    # (and per-device under split="proportional") each item's result stays
+    # on the device that computed it
     per_item: List[jax.Array] = []
     for b in out_batches:
-        per_item.extend(split_batched_blob(b))
+        per_item.extend(plan.split_output(b))
 
     results: List[Data] = []
     for i in range(len(datasets)):
@@ -567,4 +929,11 @@ def stream_launch(process, datasets: Sequence[Any], *, batch: int = 1,
     if profile is not None and profile.enable:
         jax.block_until_ready([r.device_blob for r in results])
         profile.record(time.perf_counter() - t0)
+    if sync or (profile is not None and profile.enable):
+        # the results are ready, so the per-device completion timers are
+        # about to finish — settle them now and callers observe a fully
+        # refined DeviceProfileRegistry on return.  Async callers
+        # (sync=False, no profile) keep the no-blocking contract; their
+        # timers record on their own as results land.
+        plan.join_timers()
     return results

@@ -1,12 +1,34 @@
-"""Production mesh construction.
+"""Device meshes and per-device throughput profiles.
 
-A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state — device count is locked at first jax init, and
-the dry-run must set XLA_FLAGS before that happens.
+Two concerns live here, both device-count housekeeping the framework hides
+from user code (paper §III-A.1a — selecting devices is the ONLY
+device-dependent call the user makes):
+
+* **Mesh construction** — explicit-device ``("data", "model")`` meshes.
+  These are FUNCTIONS (not module-level constants) so importing this
+  module never touches jax device state: device count is locked at first
+  jax init, and the dry-run must set ``XLA_FLAGS`` before that happens.
+  :class:`repro.core.app.CLapp` builds :func:`make_data_mesh` over its
+  *selected* devices at ``init()``; every transfer and launch then goes
+  through the mesh (``app.data_sharding``) instead of naming devices.
+
+* **Device throughput profiles** — :class:`DeviceProfile` /
+  :class:`DeviceProfileRegistry`, the measured items/sec record behind
+  the streaming executor's ``split="proportional"`` policy (the EngineCL
+  direction from the ROADMAP: per-device batch splits proportional to
+  measured throughput instead of the equal ``NamedSharding`` split).
+  Every proportionally-split launch feeds its per-device wall times back
+  into the registry, so the split self-calibrates: the first batch runs
+  balanced (the cold fallback), and every batch after that is carved by
+  the rates the previous batches actually achieved.  See
+  :mod:`repro.core.stream` for the execution side and
+  ``docs/architecture.md`` for the full story.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -37,3 +59,153 @@ def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever devices exist locally, as a (data, model) mesh — used by the
     examples and tests on the single CPU device."""
     return make_data_mesh(jax.devices())
+
+
+# ---------------------------------------------------------------------------
+# Per-device throughput profiles (EngineCL-style measured load balancing)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeviceProfile:
+    """Measured throughput of one device: items/sec, refined per launch.
+
+    ``record(items, seconds)`` folds one observation into an exponential
+    moving average (``ema`` weight on the newest sample), so the estimate
+    tracks drifting device speed (thermal throttling, contention) without
+    a warmup restart.  The raw per-launch wall times are kept in a
+    :class:`~repro.core.process.ProfileParameters` (``seconds``) so the
+    usual mean/p50/p99 statistics are available for introspection.
+    """
+
+    device_id: int
+    ema: float = 0.3
+    items: int = 0                  # total items this device has processed
+    _rate: float = float("nan")     # EMA items/sec
+
+    def __post_init__(self):
+        # lazy import: mesh must stay importable before core is set up
+        from repro.core.process import ProfileParameters
+        self.seconds = ProfileParameters(enable=True)
+
+    def record(self, items: int, seconds: float) -> None:
+        """Fold one measured launch (``items`` rows in ``seconds``) in."""
+        if items <= 0 or seconds <= 0:
+            return
+        self.seconds.record(seconds)
+        self.items += int(items)
+        sample = items / seconds
+        if self.cold:
+            self._rate = sample
+        else:
+            self._rate = self.ema * sample + (1.0 - self.ema) * self._rate
+
+    @property
+    def rate(self) -> float:
+        """Current items/sec estimate; ``nan`` when nothing was recorded."""
+        return self._rate
+
+    @property
+    def cold(self) -> bool:
+        return self._rate != self._rate      # nan check
+
+    def set_rate(self, rate: float) -> None:
+        """Seed the estimate directly (benchmarks, tests, emulated pools)."""
+        if rate < 0:
+            raise ValueError(f"rate must be >= 0 items/sec, got {rate}")
+        self._rate = float(rate)
+
+
+class DeviceProfileRegistry:
+    """Per-device :class:`DeviceProfile` store owned by a ``CLapp``.
+
+    The streaming executor records into it from every proportionally-split
+    launch (one sample per device per batch) and reads it back through
+    :meth:`split` to carve the next stacked batch.  Thread-safe: the
+    executor's per-device completion timers record from worker threads
+    while the dispatch loop reads the current rates.
+    """
+
+    def __init__(self, ema: float = 0.3):
+        self.ema = ema
+        self._profiles: Dict[int, DeviceProfile] = {}
+        self._lock = threading.Lock()
+
+    def profile(self, device: jax.Device) -> DeviceProfile:
+        with self._lock:
+            p = self._profiles.get(device.id)
+            if p is None:
+                p = DeviceProfile(device_id=device.id, ema=self.ema)
+                self._profiles[device.id] = p
+            return p
+
+    def record(self, device: jax.Device, items: int, seconds: float) -> None:
+        p = self.profile(device)
+        with self._lock:
+            p.record(items, seconds)
+
+    def set_rate(self, device: jax.Device, rate: float) -> None:
+        p = self.profile(device)
+        with self._lock:
+            p.set_rate(rate)
+
+    def rates(self, devices: Sequence[jax.Device]) -> List[float]:
+        """Current items/sec estimate per device (``nan`` where cold)."""
+        return [self.profile(d).rate for d in devices]
+
+    def warm(self, devices: Sequence[jax.Device]) -> bool:
+        """True when EVERY given device has a measured rate."""
+        return all(not self.profile(d).cold for d in devices)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._profiles.clear()
+
+    def split(self, rows: int, devices: Sequence[jax.Device],
+              ) -> Optional[Tuple[int, ...]]:
+        """Per-device row counts for ``rows`` items, proportional to the
+        measured rates — or ``None`` when the proportional carve is not
+        justified and the caller should fall back to an equal split:
+
+        * any device's profile is **cold** (no measurement yet),
+        * the batch is **too small to matter** (``rows < 2 *
+          len(devices)`` — a proportional carve can differ from balanced
+          by at most one row per device there),
+        * every measured rate is zero (degenerate).
+
+        A zero-rate device gets **zero rows** (it is skipped entirely —
+        the "broken accelerator stays in the pool" case; the streaming
+        plan's balanced fallback also excludes zero-rate devices, so the
+        exclusion survives the ``None`` cases above — see
+        :meth:`repro.core.stream._BatchPlan.split_vector`).  Rounding is
+        largest-remainder with ties broken by device order, so the vector
+        is deterministic for given rates and always sums to ``rows``.
+        """
+        n = len(devices)
+        if n == 0:
+            raise ValueError("cannot split over zero devices")
+        if rows < 2 * n:
+            return None
+        rates = self.rates(devices)
+        if any(r != r for r in rates):       # any cold -> fall back
+            return None
+        total = sum(rates)
+        if total <= 0:
+            return None
+        quotas = [rows * r / total for r in rates]
+        counts = [int(q) for q in quotas]
+        # largest-remainder rounding: hand out the missing rows to the
+        # largest fractional parts (stable: ties go to the earlier device)
+        remainder = rows - sum(counts)
+        order = sorted(range(n), key=lambda i: (-(quotas[i] - counts[i]), i))
+        for i in order[:remainder]:
+            counts[i] += 1
+        return tuple(counts)
+
+    @staticmethod
+    def balanced(rows: int, n: int) -> Tuple[int, ...]:
+        """The equal-split fallback vector: rows spread as evenly as they
+        divide (the first ``rows % n`` devices carry one extra row)."""
+        if n <= 0:
+            raise ValueError("cannot split over zero devices")
+        base, extra = divmod(rows, n)
+        return tuple(base + (1 if i < extra else 0) for i in range(n))

@@ -24,7 +24,10 @@ executor in a request/response loop —
   :class:`repro.core.stream.StreamQueue` s (the admission buffer per the
   ROADMAP), zipped before each launch: batch *i+1* is in flight to the
   device — sharded across the mesh's ``data`` axis when ``sharded=True``
-  — while batch *i* computes.
+  — while batch *i* computes.  With ``split="proportional"`` each served
+  batch is instead carved into per-device sub-batches sized by the
+  measured throughput in ``app.device_profiles`` (equal fallback while
+  profiles are cold); see :mod:`repro.core.stream`.
 * **Flush timeout** — with ``flush_timeout`` (seconds) set, a background
   drain thread serves continuously: full batches launch immediately, and
   a PARTIAL batch is flushed once its oldest request has waited
@@ -53,8 +56,7 @@ import jax
 from repro.core.data import Data
 from repro.core.process import PortError
 from repro.core.stream import (StreamQueue, _BatchPlan, _JoinFeed,
-                               _edge_blobs, _prepare_aux)
-from repro.core.arena import split_batched_blob
+                               _edge_blobs)
 from repro.core.sync import Coherence
 
 
@@ -105,6 +107,7 @@ class PipelineServer:
 
     def __init__(self, pipeline, *, batch: int = 8, sharded: bool = False,
                  depth: int = 2, tail_waste_threshold: float = 0.5,
+                 split: str = "equal",
                  flush_timeout: Optional[float] = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
@@ -116,6 +119,7 @@ class PipelineServer:
         self.sharded = sharded
         self.depth = depth
         self.tail_waste_threshold = tail_waste_threshold
+        self.split = split
         self.flush_timeout = flush_timeout
         self._pending: Deque[_Request] = deque()
         self._next_rid = 0
@@ -141,12 +145,12 @@ class PipelineServer:
         self._built = built
         self._plan = _BatchPlan(
             built.executor, self.batch, sharded=self.sharded,
-            tail_waste_threshold=self.tail_waste_threshold).init()
+            tail_waste_threshold=self.tail_waste_threshold,
+            split=self.split).init()
         # aux wiring is fixed for the server's lifetime: prepare (and, when
         # sharded, mesh-replicate) the aux blobs ONCE, not per drain
         app = built.executor.getApp()
-        self._aux_blobs = _prepare_aux(app, self._plan.launchable,
-                                       self.sharded)
+        self._aux_blobs = self._plan.prepare_aux()
         app.wait_transfers(self._plan.launchable.aux_handles)
 
     @property
@@ -167,11 +171,16 @@ class PipelineServer:
         batch plus every partial-flush row count the ragged-tail policy
         can pick.  Keeps first-seen group sizes (e.g. timing-dependent
         partial flushes under ``flush_timeout``) from paying XLA compile
-        time inside a served window."""
+        time inside a served window.  Under ``split="proportional"`` the
+        covered vectors are the balanced fallback plus the vector the
+        registry holds NOW — as measurements refine, a shifted vector can
+        still compile one new (device, rows) executable lazily (cached
+        forever after); call ``warmup()`` again after a calibration run
+        for full coverage."""
         if self._plan is None:
             raise RuntimeError("server not built yet (submit a request)")
         for r in range(1, self.batch + 1):
-            self._plan.executable(self._plan.launch_rows(r))
+            self._plan.precompile(r)
 
     # ------------------------------------------------------------ admission
     def _pack_request(self, request: Any) -> Tuple[Any, ...]:
@@ -221,7 +230,7 @@ class PipelineServer:
     def _responses_for(self, group: Sequence[_Request],
                        out: jax.Array, t_done: float) -> List[ServeResponse]:
         la = self._plan.launchable
-        per_item = split_batched_blob(out)[:len(group)]
+        per_item = self._plan.split_output(out)[:len(group)]
         self.launches += 1
         responses = []
         for req, blob in zip(group, per_item):
@@ -255,15 +264,18 @@ class PipelineServer:
             return []
         plan = self._plan
         la = plan.launchable
-        app = plan.process.getApp()
         aux_blobs = self._aux_blobs
 
-        # compile the expected tail executable BEFORE the launch loop so a
-        # partial flush never stalls serving (nor charges XLA compile time
-        # to the requests' recorded latencies)
+        # compile the expected tail executable(s) BEFORE the launch loop so
+        # a partial flush never stalls serving (nor charges XLA compile
+        # time to the requests' recorded latencies).  Under
+        # split="proportional" this covers the balanced fallback and the
+        # CURRENT measured vector; a vector that shifts as the registry
+        # refines can still pay one lazy compile per new (device, rows)
+        # pair — see _BatchPlan.precompile.
         tail = len(self._pending) % self.batch
         if tail:
-            plan.executable(plan.launch_rows(tail))
+            plan.precompile(tail)
 
         groups: Deque[List[_Request]] = deque()
 
@@ -284,18 +296,18 @@ class PipelineServer:
         # one row-aligned feed per input edge, zipped per launch (the
         # fan-in join path; single-input pipelines are the 1-edge case)
         feed = _JoinFeed(plan, group_iter())
-        target = plan.batch_sharding or app.device
-        queues = [StreamQueue(feed.feed(e), device=target, depth=self.depth)
+        queues = [StreamQueue(feed.feed(e), device=plan.queue_target,
+                              depth=self.depth)
                   for e in range(la.n_inputs)]
         responses: List[ServeResponse] = []
         for dev_blobs in zip(*queues):  # next flush transfers while this runs
-            out = plan.executable(int(dev_blobs[0].shape[0]))(dev_blobs,
-                                                              aux_blobs)
+            out = plan.launch(dev_blobs, aux_blobs)
             jax.block_until_ready(out)      # latency = result actually ready
             t_done = time.perf_counter()
             responses.extend(self._responses_for(groups.popleft(), out,
                                                  t_done))
         self.served += len(responses)
+        plan.join_timers()      # results are ready; settle the rate timers
         return responses
 
     # ------------------------------------------- background drain (timeout)
@@ -325,12 +337,10 @@ class PipelineServer:
             responses: List[ServeResponse] = []
             error: Optional[BaseException] = None
             try:
-                rows = plan.launch_rows(len(group))
-                target = plan.batch_sharding or plan.process.getApp().device
                 stacked = tuple(
-                    jax.device_put(blob, target)
+                    plan.place(blob)
                     for blob in plan.stack_group([r.blobs for r in group]))
-                out = plan.executable(rows)(stacked, self._aux_blobs)
+                out = plan.launch(stacked, self._aux_blobs)
                 jax.block_until_ready(out)
                 responses = self._responses_for(group, out,
                                                 time.perf_counter())

@@ -385,6 +385,153 @@ def test_sharded_joined_stream_bit_identical_and_spread(rng):
 
 
 @needs_8_devices
+def test_proportional_stream_bit_identical_and_spread(rng):
+    """split='proportional' over 8 devices: bit-identical to the equal
+    split, every device used, and the warmup run leaves a warm registry."""
+    app = CLapp().init()
+    datasets = _mk_datasets(rng, 32)
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = Scale(app)
+    p.in_handle = h_in; p.out_handle = h_out
+    p.set_launch_parameters(-1.5)
+    p.init()
+    eq = p.stream(datasets, batch=16, sharded=True, sync=True)
+    assert not app.device_profiles.warm(app.devices)   # equal path: no rates
+    pr = p.stream(datasets, batch=16, sharded=True, split="proportional",
+                  sync=True)
+    out_devices = set()
+    for i, (a, b) in enumerate(zip(eq, pr)):
+        np.testing.assert_array_equal(a.get_ndarray(0).host,
+                                      b.get_ndarray(0).host,
+                                      err_msg=f"dataset {i}")
+        out_devices |= set(b.device_blob.devices())
+    assert out_devices == set(app.devices), \
+        "cold-profile fallback must still spread work over every device"
+    assert app.device_profiles.warm(app.devices), \
+        "every device's launches must have recorded items/sec"
+
+
+@needs_8_devices
+def test_proportional_skewed_allocation(rng):
+    """A seeded skewed registry steers rows: the slow device receives
+    (many) fewer items than the balanced share, a zero-rate device none —
+    outputs still bit-identical to the equal split."""
+    app = CLapp().init()
+    slow, fast = app.devices[0], app.devices[1:]
+    app.device_profiles.set_rate(slow, 1.0)
+    for d in fast:
+        app.device_profiles.set_rate(d, 7.0)
+    vec = app.device_profiles.split(50, app.devices)
+    assert vec == (1, 7, 7, 7, 7, 7, 7, 7)
+
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = Scale(app)
+    p.in_handle = h_in; p.out_handle = h_out
+    p.set_launch_parameters(2.5)
+    p.init()
+    datasets = _mk_datasets(rng, 16)
+    eq = p.stream(datasets, batch=16, sharded=True, sync=True)
+
+    # zero-rate device: gets nothing at all
+    app.device_profiles.set_rate(slow, 0.0)
+    pr = p.stream(datasets, batch=16, sharded=True, split="proportional",
+                  sync=True)
+    used = set()
+    for a, b in zip(eq, pr):
+        np.testing.assert_array_equal(a.get_ndarray(0).host,
+                                      b.get_ndarray(0).host)
+        used |= set(b.device_blob.devices())
+    assert slow not in used, "a zero-rate device must receive zero rows"
+    assert used == set(fast)
+
+
+@needs_8_devices
+def test_proportional_joined_stream_shares_split_vector(rng):
+    """A fan-in join under split='proportional': every edge is carved by
+    ONE shared split vector, so row alignment holds and results match the
+    equal split bit for bit — in stream AND serve mode, skewed registry
+    included."""
+    app = CLapp().init()
+    app.device_profiles.set_rate(app.devices[0], 1.0)
+    for d in app.devices[1:]:
+        app.device_profiles.set_rate(d, 3.0)
+    a = Scale(app).bind(infile="x", outfile="lhs", params=2.0)
+    j = MulTwo(app).bind(infile="lhs", outfile="prod", rhs="r")
+    pipe = Pipeline.from_graph(app, [a, j], output="prod")
+    lhs = _mk_datasets(rng, 16)
+    rhs = _mk_datasets(rng, 16)
+    items = [{"x": l, "r": r} for l, r in zip(lhs, rhs)]
+    want = [pipe.run(it).get_ndarray(0).host.copy() for it in items]
+
+    got = pipe.run(items, mode="stream", batch=8, sharded=True,
+                   split="proportional")
+    for i, o in enumerate(got):
+        np.testing.assert_array_equal(o.get_ndarray(0).host, want[i],
+                                      err_msg=f"item {i}")
+    served = pipe.run(items, mode="serve", batch=8, sharded=True,
+                      split="proportional")
+    for i, o in enumerate(served):
+        np.testing.assert_array_equal(o.get_ndarray(0).host, want[i],
+                                      err_msg=f"served item {i}")
+
+
+@needs_8_devices
+def test_zero_rate_device_excluded_from_balanced_fallback(rng):
+    """An explicitly zero-rated device gets no rows even when the split
+    falls back to balanced (small batch / cold peers) — the 'broken
+    accelerator stays in the pool' case must survive the fallback."""
+    app = CLapp().init()
+    broken = app.devices[0]
+    app.device_profiles.set_rate(broken, 0.0)   # peers stay cold
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = Scale(app)
+    p.in_handle = h_in; p.out_handle = h_out
+    p.set_launch_parameters(3.0)
+    p.init()
+    datasets = _mk_datasets(rng, 8)
+    # batch=8 over 8 devices -> rows < 2*n -> registry.split returns None
+    got = p.stream(datasets, batch=8, sharded=True, split="proportional",
+                   sync=True)
+    used = set()
+    for d, o in zip(datasets, got):
+        np.testing.assert_array_equal(o.get_ndarray(0).host,
+                                      d.get_ndarray(0).host * 3.0)
+        used |= set(o.device_blob.devices())
+    assert broken not in used
+    assert used == set(app.devices[1:])
+
+
+@needs_8_devices
+def test_proportional_uneven_batch_allowed(rng):
+    """Proportional carving lifts the equal split's batch-divisibility
+    constraint: batch=6 over 8 devices streams fine (and stays
+    bit-identical to an unsharded run)."""
+    app = CLapp().init()
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = Scale(app)
+    p.in_handle = h_in; p.out_handle = h_out
+    p.set_launch_parameters(0.5)
+    p.init()
+    datasets = _mk_datasets(rng, 12)
+    with pytest.raises(ValueError, match="divisible"):
+        p.stream(datasets, batch=6, sharded=True)
+    want = p.stream(datasets, batch=6, sync=True)
+    got = p.stream(datasets, batch=6, sharded=True, split="proportional",
+                   sync=True)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w.get_ndarray(0).host,
+                                      g.get_ndarray(0).host)
+
+
+@needs_8_devices
 def test_single_device_traits_on_multi_device_host(rng):
     """DeviceTraits(count=1) on an 8-device host: the mesh is trivial and
     sharded=True degrades to the single-device path — the algorithm call

@@ -1,0 +1,330 @@
+"""Throughput-proportional batch splitting: the DeviceProfile registry,
+the split-vector math, and the single-device end of the execution path.
+
+The split policy's contract (see the ``repro.core.stream`` module
+docstring):
+
+* proportional carving follows the MEASURED per-device items/sec in
+  ``app.device_profiles``, with largest-remainder rounding that always
+  sums to the requested rows;
+* cold profiles, too-small batches, and all-zero rates fall back to the
+  balanced (equal) vector — never an error, never a stall;
+* a zero-rate device gets zero rows;
+* outputs are bit-identical to the equal split (per-item programs cannot
+  observe how the batch was carved).
+
+Multi-device placement behaviour lives in tests/test_mesh_stream.py's
+forced-8-device child run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CLapp, Pipeline, Process, XData
+from repro.core.stream import SplitBatch, _BatchPlan
+from repro.launch.mesh import DeviceProfile, DeviceProfileRegistry
+
+
+class Scale(Process):
+    def apply(self, views, aux, params):
+        return {k: v * params for k, v in views.items()}
+
+
+@pytest.fixture
+def app():
+    return CLapp().init()
+
+
+def _mk_datasets(rng, n, shape=(8, 8)):
+    return [XData({"img": rng.standard_normal(shape).astype(np.float32)})
+            for _ in range(n)]
+
+
+class _Dev:
+    """Stand-in device: the registry only reads ``.id``."""
+
+    def __init__(self, id):
+        self.id = id
+
+
+def _devs(n):
+    return [_Dev(i) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# DeviceProfile: EMA rate estimation
+# ---------------------------------------------------------------------------
+
+def test_device_profile_records_ema():
+    p = DeviceProfile(device_id=0, ema=0.5)
+    assert p.cold and p.rate != p.rate          # nan
+    p.record(10, 1.0)                           # first sample sets directly
+    assert p.rate == pytest.approx(10.0)
+    p.record(20, 1.0)                           # 0.5*20 + 0.5*10
+    assert p.rate == pytest.approx(15.0)
+    assert p.items == 30
+    assert len(p.seconds.samples) == 2          # raw wall times kept
+    assert p.seconds.mean() == pytest.approx(1.0)
+
+
+def test_device_profile_ignores_degenerate_samples():
+    p = DeviceProfile(device_id=0)
+    p.record(0, 1.0)
+    p.record(4, 0.0)
+    p.record(4, -1.0)
+    assert p.cold
+
+
+def test_device_profile_set_rate():
+    p = DeviceProfile(device_id=0)
+    p.set_rate(3.0)
+    assert p.rate == 3.0 and not p.cold
+    with pytest.raises(ValueError):
+        p.set_rate(-1.0)
+
+
+def test_registry_record_and_rates():
+    reg = DeviceProfileRegistry()
+    d0, d1 = _devs(2)
+    reg.record(d0, 8, 2.0)
+    rates = reg.rates([d0, d1])
+    assert rates[0] == pytest.approx(4.0)
+    assert rates[1] != rates[1]                 # d1 still cold
+    assert not reg.warm([d0, d1])
+    reg.set_rate(d1, 1.0)
+    assert reg.warm([d0, d1])
+    reg.reset()
+    assert not reg.warm([d0])
+
+
+# ---------------------------------------------------------------------------
+# Split-vector math: proportional, fallbacks, edge cases
+# ---------------------------------------------------------------------------
+
+def test_split_proportional_rounding_sums():
+    reg = DeviceProfileRegistry()
+    devs = _devs(3)
+    for d, r in zip(devs, (1.0, 2.0, 5.0)):
+        reg.set_rate(d, r)
+    vec = reg.split(16, devs)
+    assert sum(vec) == 16
+    assert vec == (2, 4, 10)                   # exact proportions
+
+
+def test_split_largest_remainder_is_deterministic():
+    reg = DeviceProfileRegistry()
+    devs = _devs(3)
+    for d in devs:
+        reg.set_rate(d, 1.0)                   # equal rates, rows % n != 0
+    vec = reg.split(7, devs)
+    assert vec == (3, 2, 2)                    # tie -> earlier device
+    assert reg.split(7, devs) == vec           # stable across calls
+
+
+def test_split_cold_profile_falls_back():
+    reg = DeviceProfileRegistry()
+    devs = _devs(4)
+    for d in devs[:-1]:
+        reg.set_rate(d, 2.0)
+    assert reg.split(16, devs) is None         # one cold device -> fallback
+
+
+def test_split_small_batch_falls_back():
+    reg = DeviceProfileRegistry()
+    devs = _devs(4)
+    for d in devs:
+        reg.set_rate(d, 2.0)
+    assert reg.split(7, devs) is None          # rows < 2 * n_devices
+    assert reg.split(8, devs) == (2, 2, 2, 2)
+
+
+def test_split_zero_rate_device_gets_nothing():
+    reg = DeviceProfileRegistry()
+    devs = _devs(3)
+    for d, r in zip(devs, (0.0, 1.0, 3.0)):
+        reg.set_rate(d, r)
+    vec = reg.split(16, devs)
+    assert vec[0] == 0 and sum(vec) == 16
+
+
+def test_split_all_zero_rates_falls_back():
+    reg = DeviceProfileRegistry()
+    devs = _devs(2)
+    for d in devs:
+        reg.set_rate(d, 0.0)
+    assert reg.split(8, devs) is None
+
+
+def test_split_zero_devices_raises():
+    with pytest.raises(ValueError):
+        DeviceProfileRegistry().split(8, [])
+    with pytest.raises(ValueError):
+        DeviceProfileRegistry.balanced(8, 0)
+
+
+def test_balanced_vector():
+    assert DeviceProfileRegistry.balanced(10, 4) == (3, 3, 2, 2)
+    assert DeviceProfileRegistry.balanced(8, 4) == (2, 2, 2, 2)
+    assert DeviceProfileRegistry.balanced(2, 4) == (1, 1, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Execution path (single device; multi-device in test_mesh_stream.py)
+# ---------------------------------------------------------------------------
+
+def test_proportional_requires_sharded(app, rng):
+    p = _wired_scale(app)
+    with pytest.raises(ValueError, match="sharded"):
+        p.stream(_mk_datasets(rng, 4), batch=2, split="proportional")
+
+
+def test_unknown_split_policy_rejected(app, rng):
+    p = _wired_scale(app)
+    with pytest.raises(ValueError, match="unknown split policy"):
+        p.stream(_mk_datasets(rng, 4), batch=2, sharded=True, split="nope")
+    with pytest.raises(ValueError, match="unknown split policy"):
+        _BatchPlan(p, 2, sharded=True, split="fair")
+
+
+def _wired_scale(app, params=-2.0):
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = Scale(app)
+    p.in_handle = h_in
+    p.out_handle = h_out
+    p.set_launch_parameters(params)
+    p.init()
+    return p
+
+
+def test_proportional_bit_identical_single_device(app, rng):
+    p = _wired_scale(app)
+    datasets = _mk_datasets(rng, 10)
+    eq = p.stream(datasets, batch=4, sharded=True, sync=True)
+    pr = p.stream(datasets, batch=4, sharded=True, split="proportional",
+                  sync=True)
+    for i, (a, b) in enumerate(zip(eq, pr)):
+        np.testing.assert_array_equal(a.get_ndarray(0).host,
+                                      b.get_ndarray(0).host,
+                                      err_msg=f"dataset {i}")
+
+
+def test_proportional_stream_warms_registry(app, rng):
+    """The warmup batches record measured items/sec — the first batch runs
+    balanced (cold fallback) and later calls see a warm registry."""
+    p = _wired_scale(app)
+    assert not app.device_profiles.warm(app.devices)
+    p.stream(_mk_datasets(rng, 8), batch=4, sharded=True,
+             split="proportional", sync=True)    # sync -> timers settled
+    assert app.device_profiles.warm(app.devices)
+    prof = app.device_profiles.profile(app.device)
+    assert prof.items >= 8
+    assert prof.rate > 0
+    assert len(prof.seconds.samples) >= 2
+
+
+def test_proportional_uneven_tail_allowed(app, rng):
+    """Proportional carving lifts the sharded divisibility constraint: a
+    ragged tail that would be padded under the equal split can run at its
+    exact size (tail_waste_threshold=0 forces the tail executable)."""
+    p = _wired_scale(app)
+    datasets = _mk_datasets(rng, 7)
+    eq = p.stream(datasets, batch=4, sharded=True, sync=True,
+                  tail_waste_threshold=1.0)      # equal: always pad
+    pr = p.stream(datasets, batch=4, sharded=True, split="proportional",
+                  tail_waste_threshold=0.0, sync=True)  # exact tail of 3
+    for a, b in zip(eq, pr):
+        np.testing.assert_array_equal(a.get_ndarray(0).host,
+                                      b.get_ndarray(0).host)
+
+
+def test_proportional_three_modes_bit_identical(app, rng):
+    pipe = Pipeline(app) | Scale(app).bind(params=3.0)
+    datasets = _mk_datasets(rng, 8)
+    want = [pipe.run(d).get_ndarray(0).host.copy() for d in datasets]
+    streamed = pipe.run(datasets, mode="stream", batch=4, sharded=True,
+                        split="proportional")
+    served = pipe.run(datasets, mode="serve", batch=4, sharded=True,
+                      split="proportional")
+    for i, (w, s, v) in enumerate(zip(want, streamed, served)):
+        np.testing.assert_array_equal(s.get_ndarray(0).host, w,
+                                      err_msg=f"stream item {i}")
+        np.testing.assert_array_equal(v.get_ndarray(0).host, w,
+                                      err_msg=f"serve item {i}")
+
+
+def test_degenerate_all_zero_rates_still_runs(app, rng):
+    """Every device zero-rated is degenerate: the balanced fallback spans
+    the full pool rather than refusing to run."""
+    app.device_profiles.set_rate(app.device, 0.0)
+    p = _wired_scale(app)
+    datasets = _mk_datasets(rng, 4)
+    got = p.stream(datasets, batch=2, sharded=True, split="proportional",
+                   sync=True)
+    for d, o in zip(datasets, got):
+        np.testing.assert_array_equal(o.get_ndarray(0).host,
+                                      d.get_ndarray(0).host * -2.0)
+
+
+def test_timer_list_stays_bounded(app, rng):
+    """One completion timer per device per launch must not accumulate
+    forever (long-lived proportional servers would leak threads)."""
+    from repro.core.stream import _BatchPlan
+    p = _wired_scale(app)
+    plan = _BatchPlan(p, 2, sharded=True, split="proportional").init()
+    aux = plan.prepare_aux()
+    for _ in range(12):
+        blobs = [d.pack_host() for d in _mk_datasets(rng, 2)]
+        placed = [plan.place(s) for s in plan.stack_group(
+            [(b,) for b in blobs])]
+        out = plan.launch(placed, aux)
+        jax.block_until_ready(out)
+    assert len(plan._timers) < 12, \
+        "finished timers must be pruned, not retained per launch"
+
+
+def test_proportional_background_drain(app, rng):
+    """The flush-timeout worker goes through plan.place/plan.launch (not
+    the queue feeds) — it must honor the proportional carve too."""
+    pipe = Pipeline(app) | Scale(app).bind(params=-1.0)
+    datasets = _mk_datasets(rng, 5)
+    want = [pipe.run(d).get_ndarray(0).host.copy() for d in datasets]
+    with pipe.serve(batch=4, sharded=True, split="proportional",
+                    flush_timeout=0.01) as server:
+        rids = [server.submit(d) for d in datasets]
+        responses = server.collect(len(rids), timeout=30.0)
+    assert len(responses) == len(rids)
+    by_rid = {r.rid: r for r in responses}
+    for rid, w in zip(rids, want):
+        d = by_rid[rid].data
+        d.sync_to_host()
+        np.testing.assert_array_equal(d.get_ndarray(0).host, w)
+
+
+def test_plan_executable_refused_in_proportional_mode(app):
+    p = _wired_scale(app)
+    plan = _BatchPlan(p, 2, sharded=True, split="proportional").init()
+    with pytest.raises(RuntimeError, match="pinned"):
+        plan.executable(2)
+    # but the pinned path works
+    bp = plan.device_executable(app.device, 2)
+    assert bp.batch == 2 and bp.device is app.device
+
+
+def test_split_batch_container():
+    x = jax.device_put(np.zeros((3, 16), np.uint8))
+    y = jax.device_put(np.zeros((1, 16), np.uint8))
+    sb = SplitBatch([x, y], [3, 1], [x.devices().pop(), y.devices().pop()])
+    assert sb.shape == (4, 16)
+    assert not sb.is_deleted()
+    assert jax.block_until_ready(sb) is sb      # leaf protocol
+    x.delete(); y.delete()
+    assert sb.is_deleted()
+
+
+def test_batched_process_device_and_sharded_exclusive(app):
+    p = _wired_scale(app)
+    from repro.core import BatchedProcess
+    with pytest.raises(ValueError, match="mutually"):
+        BatchedProcess(p, 2, sharded=True, device=app.device)

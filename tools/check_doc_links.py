@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Docs smoke check: every intra-repo markdown link must resolve.
+
+Scans the repo's markdown files for ``[text](target)`` links and verifies
+that each relative target (external ``http(s)://``/``mailto:`` links and
+pure ``#anchor`` self-references are skipped) exists on disk, relative to
+the file containing the link.  Exits non-zero listing every dangling
+link — CI runs this in the docs-smoke job so the guides cannot rot.
+
+    python tools/check_doc_links.py [root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — but not images' URL part differences; images ![...](...)
+# are matched too (the target must still exist).  Nested parens are not
+# used in this repo's docs.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".github",
+                                    "node_modules")]
+        for f in filenames:
+            if f.endswith(".md"):
+                out.append(os.path.join(dirpath, f))
+    return sorted(out)
+
+
+def check(root: str) -> list[str]:
+    errors = []
+    for path in doc_files(root):
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES) or target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                errors.append(
+                    f"{os.path.relpath(path, root)}: dangling link "
+                    f"'{target}' (resolved to {os.path.relpath(resolved, root)})")
+    return errors
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1]) if len(sys.argv) > 1 else \
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    errors = check(root)
+    n_files = len(doc_files(root))
+    if errors:
+        print(f"doc link check FAILED ({len(errors)} dangling):")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"doc link check OK ({n_files} markdown files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
