@@ -9,13 +9,15 @@ through the SimpleMRIRecon chain two ways:
   per item, double-buffered to the device (transfer of batch *i+1*
   overlaps compute of batch *i*), one vmapped launch per k items.
 
-Prints the harness CSV rows plus one ``BENCH {json}`` line for the perf
+Prints the harness CSV rows plus one ``BENCH {json}`` line and writes
+``BENCH_stream_throughput.json`` next to this file for the perf
 trajectory.  Acceptance: streamed throughput >= 1.5x sequential for >= 8
 Data sets, and streamed results bit-identical to sequential ``launch()``.
 """
 from __future__ import annotations
 
 import json
+import os
 import time
 from typing import List
 
@@ -100,13 +102,18 @@ def rows() -> List[str]:
         f"stream_batched_per_set,{us_stream:.1f},"
         f"batch={BATCH};speedup={speedup:.2f};bit_identical={int(bitwise)}",
     ]
-    print("BENCH " + json.dumps({
+    bench = {
         "name": "stream_throughput",
         "n_datasets": N_DATASETS, "batch": BATCH,
         "shape": [FRAMES, COILS, H, W],
         "sequential_s": round(t_seq, 4), "streamed_s": round(t_stream, 4),
         "speedup": round(speedup, 3), "bit_identical": bitwise,
-    }))
+    }
+    print("BENCH " + json.dumps(bench))
+    out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_stream_throughput.json")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=2)
     return out_rows
 
 

@@ -248,6 +248,7 @@ class CLapp:
             coherence = Coherence.DEVICE_FRESH
         data.device_blob = jax.device_put(
             blob, sharding if sharding is not None else self.default_sharding)
+        data.donated_by = None  # explicit re-upload resurrects a donated Data
         if wait:
             self._in_flight.pop(handle, None)
             data.coherence = coherence
@@ -283,7 +284,12 @@ class CLapp:
     def _set_device_blob(self, handle: DataHandle, blob: jax.Array) -> None:
         data = self.getData(handle)
         data.device_blob = blob
-        data.coherence = Coherence.DEVICE_FRESH
+        data.donated_by = None  # fresh result resurrects a donated edge
+        # internal pipeline edges are planned to live on the device only;
+        # everything else is an ordinary "device copy newer" write
+        data.coherence = (Coherence.DEVICE_RESIDENT
+                          if data.residency == "device"
+                          else Coherence.DEVICE_FRESH)
         self._in_flight.pop(handle, None)  # old upload superseded
 
     @property

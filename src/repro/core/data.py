@@ -105,6 +105,15 @@ class Data:
         # device side (owned by CLIPERApp.addData)
         self.layout: Optional[ArenaLayout] = None
         self.device_blob: Optional[jax.Array] = None
+        # residency plan annotations (set by Pipeline.build on edge Data):
+        # 'host' = pinned host path (graph inputs/outputs), 'device' =
+        # internal edge whose blob never lands on the host mid-chain.
+        self.residency: str = "host"
+        self.residency_edge: Optional[str] = None   # edge name in the graph
+        self.producer_name: Optional[str] = None    # stage that writes it
+        # set by Process.launch when a downstream stage donated this blob
+        # to XLA; reads must fail loudly (with graph context when known)
+        self.donated_by: Optional[str] = None
         # spec-only sets (no arrays, or any array without host values) start
         # EMPTY: there is nothing authoritative to read yet.  Stamping them
         # HOST_FRESH would make authoritative()/save() trust absent host
@@ -187,9 +196,34 @@ class Data:
         blob, _ = pack_host({a.name: a.host for a in self._arrays}, self.layout)
         return blob
 
+    # -- donation bookkeeping ---------------------------------------------------
+    def mark_donated(self, consumer: str) -> None:
+        """Record that ``consumer`` donated this Data's device blob to XLA
+        (the buffer is dead); drop the reference so later reads raise."""
+        self.device_blob = None
+        self.donated_by = consumer
+
+    def _raise_donated(self) -> None:
+        from .process import DonatedBufferError  # local: process imports data
+
+        if self.producer_name or self.residency_edge:
+            edge = self.residency_edge or "?"
+            producer = self.producer_name or "?"
+            raise DonatedBufferError(
+                f"device blob of edge '{edge}' (produced by stage "
+                f"'{producer}') was donated to downstream stage "
+                f"'{self.donated_by}' and no longer exists; read the "
+                f"pipeline's OUTPUT edge instead of a donated internal one, "
+                f"or rebuild with residency disabled for this edge")
+        raise DonatedBufferError(
+            f"device blob was donated to '{self.donated_by}' and no longer "
+            f"exists; re-upload with host2device before reusing this Data")
+
     # -- device views ----------------------------------------------------------
     def device_views(self) -> Dict[str, jax.Array]:
         if self.device_blob is None or self.layout is None:
+            if self.donated_by is not None:
+                self._raise_donated()
             raise ValueError("Data not registered on a device (use CLapp.addData)")
         return unpack_device(self.device_blob, self.layout)
 
@@ -204,6 +238,8 @@ class Data:
         """Copy the device blob back into the host NDArrays (paper's
         ``device2Host``)."""
         if self.device_blob is None or self.layout is None:
+            if self.donated_by is not None:
+                self._raise_donated()
             raise ValueError("no device buffer to sync from")
         blob = np.asarray(self.device_blob)
         views = unpack_host(blob, self.layout)

@@ -60,6 +60,7 @@ zipped into one joined launch per batch (see :mod:`repro.core.stream`).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -177,6 +178,13 @@ class _Built:
     input_layouts: Dict[str, Any]           # input edge -> ArenaLayout
     input_order: Tuple[str, ...]            # edges in launchable position order
     output_handle: DataHandle
+    #: residency plan: edge name -> 'host' (graph input/output edges, the
+    #: pinned host path) or 'device' (internal edge; the blob never lands
+    #: on the host between stages)
+    residency: Dict[str, str] = dataclasses.field(default_factory=dict)
+    #: internal edges whose upstream blob is DONATED to their single
+    #: consumer: edge name -> consuming node name
+    donated_edges: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     @property
     def input_handle(self) -> DataHandle:
@@ -629,6 +637,54 @@ class Pipeline:
                 p.aux_handles[aname] = h
             procs.append(p)
 
+        # ---- residency plan -----------------------------------------------
+        # Edge classification drives where intermediates live (the paper's
+        # pinned-memory/zero-copy streaming promise): graph INPUT and
+        # OUTPUT edges keep the pinned host path (the caller reads/writes
+        # them), every other edge is INTERNAL — its blob stays device-
+        # resident end to end and never lands in the host arena mid-chain.
+        # An internal edge with exactly ONE consuming port (and a staged
+        # executor, where stages really are separate XLA programs) is
+        # additionally DONATED: the consumer's compiled program takes the
+        # upstream blob with donate_argnums, so XLA may reuse the buffer
+        # in place of allocating a fresh output.  Fused executors
+        # internalise these edges inside one traced program, so there is
+        # nothing to donate.  Set BEFORE init(): donation is compiled in.
+        name_counts: Dict[str, int] = {}
+        node_names: List[str] = []
+        for node in self.nodes:
+            k = name_counts.get(node.name, 0)
+            name_counts[node.name] = k + 1
+            node_names.append(node.name if k == 0 else f"{node.name}#{k}")
+        for i, p in enumerate(procs):
+            p.graph_name = node_names[i]
+        producer_of: Dict[str, int] = {
+            self._out_edges[i]: i for i in range(len(self.nodes))}
+        consumers: Dict[str, List[Tuple[int, str]]] = {}
+        for i in range(len(self.nodes)):
+            consumers.setdefault(self._in_edges[i], []).append((i, "in"))
+            for pname, jedge in self._join_edges[i].items():
+                consumers.setdefault(jedge, []).append((i, pname))
+        residency: Dict[str, str] = {}
+        donated_edges: Dict[str, str] = {}
+        for edge, h in handles.items():
+            d = app.getData(h)
+            d.residency_edge = edge
+            pi = producer_of.get(edge)
+            d.producer_name = node_names[pi] if pi is not None else None
+            internal = (edge not in self._input_edges
+                        and edge != self._output_edge)
+            d.residency = "device" if internal else "host"
+            residency[edge] = d.residency
+            if internal and not self.fuse and len(procs) > 1:
+                cons = consumers.get(edge, ())
+                if len(cons) == 1:
+                    ci, port = cons[0]
+                    if procs[ci].in_handles.get(port) != procs[ci].out_handle:
+                        procs[ci].donate_ports = \
+                            procs[ci].donate_ports | {port}
+                        donated_edges[edge] = node_names[ci]
+
         if len(procs) == 1:
             executor: Process = procs[0]
         else:
@@ -660,8 +716,17 @@ class Pipeline:
                 for e, h in input_handles.items()},
             input_order=input_order,
             output_handle=handles[self._output_edge],
+            residency=residency,
+            donated_edges=donated_edges,
         )
         return self._built
+
+    @property
+    def residency_plan(self) -> Dict[str, str]:
+        """``{edge -> 'host' | 'device'}`` from the last :meth:`build`."""
+        if self._built is None:
+            raise GraphError("pipeline not built yet")
+        return dict(self._built.residency)
 
     # ------------------------------------------------------------------ run
     def _item_tuple(self, built: _Built, item: Any, *,
@@ -708,7 +773,7 @@ class Pipeline:
     def run(self, inputs: Any = None, *, mode: str = "launch",
             batch: int = 1, sharded: bool = False, depth: int = 2,
             sync: bool = True, tail_waste_threshold: float = 0.5,
-            split: str = "equal",
+            split: str = "equal", lanes: bool = False,
             profile: Optional[ProfileParameters] = None) -> Any:
         """Route the validated graph through one of three execution modes.
 
@@ -751,16 +816,28 @@ class Pipeline:
             built = self.build(inputs)
             app = self.app
             sources = self._example_inputs(inputs)
+            t_up = time.perf_counter()
+            uploaded = []
             for edge in built.input_edges:
                 src = sources[edge]
                 d_reg = app.getData(built.input_handles[edge])
                 if src is not d_reg:
                     self._copy_into(d_reg, src, edge=edge)
                     app.host2device(built.input_handles[edge])
+                    uploaded.append(edge)
                 elif d_reg.device_blob is None:
                     # handle-bound input: the caller manages the registered
                     # Data; only transfer if it has never reached the device
                     app.host2device(built.input_handles[edge])
+                    uploaded.append(edge)
+            if uploaded and profile is not None and profile.enable:
+                # phase covers the landed transfers: with the residency plan
+                # these graph-input uploads are the ONLY host2device traffic
+                # of the whole chain (internal edges stay device-resident)
+                for edge in uploaded:
+                    jax.block_until_ready(
+                        app.getData(built.input_handles[edge]).device_blob)
+                profile.record_phase("transfer", time.perf_counter() - t_up)
             built.executor.launch(profile)
             out = app.getData(built.output_handle)
             if sync:
@@ -776,14 +853,14 @@ class Pipeline:
             return built.executor.stream(
                 items, batch=batch, depth=depth, sync=sync,
                 sharded=sharded, tail_waste_threshold=tail_waste_threshold,
-                split=split, profile=profile)
+                split=split, lanes=lanes, profile=profile)
         if mode == "serve":
             requests = list(inputs or ())
             if not requests:
                 return []
             server = self.serve(batch=batch, sharded=sharded, depth=depth,
                                 tail_waste_threshold=tail_waste_threshold,
-                                split=split)
+                                split=split, lanes=lanes)
             rids = [server.submit(d) for d in requests]
             by_rid = {r.rid: r for r in server.drain()}
             outs = []
@@ -800,6 +877,7 @@ class Pipeline:
 
     def serve(self, *, batch: int = 8, sharded: bool = False, depth: int = 2,
               tail_waste_threshold: float = 0.5, split: str = "equal",
+              lanes: bool = False,
               flush_timeout: Optional[float] = None):
         """A standing request/response loop over this pipeline (admission
         queue -> dynamic batcher -> batched (sharded) joined launches); see
@@ -814,7 +892,8 @@ class Pipeline:
         return PipelineServer(self, batch=batch, sharded=sharded,
                               depth=depth,
                               tail_waste_threshold=tail_waste_threshold,
-                              split=split, flush_timeout=flush_timeout)
+                              split=split, lanes=lanes,
+                              flush_timeout=flush_timeout)
 
     @staticmethod
     def _copy_into(dst: Data, src: Data, *, edge: str = "?") -> None:

@@ -101,14 +101,37 @@ class ProfileParameters:
     All statistics are total functions: with zero recorded samples (e.g.
     ``launch()`` was never profiled) they return ``float("nan")`` instead
     of dividing by zero.
+
+    Beyond the plain per-launch wall times (``samples``), a profile can
+    carry a **phase breakdown**: named wall-time buckets recorded via
+    :meth:`record_phase` — the streaming executor and ``aot_compile`` use
+    the conventional names ``"transfer"`` (host→device uploads),
+    ``"compile"`` (trace+lower+compile on a cache miss) and ``"compute"``
+    (executable run to completion), so benchmarks can show where a scaling
+    curve's time actually goes (``benchmarks/mesh_scaling.py``).
     """
 
     enable: bool = False
     samples: List[float] = dataclasses.field(default_factory=list)
+    phases: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
 
     def record(self, seconds: float) -> None:
         if self.enable:
             self.samples.append(seconds)
+
+    def record_phase(self, phase: str, seconds: float) -> None:
+        """Append one wall-time sample to the named phase bucket."""
+        if self.enable:
+            self.phases.setdefault(phase, []).append(seconds)
+
+    def phase_total(self, phase: str) -> float:
+        """Total seconds recorded under ``phase`` (0.0 when absent — a
+        phase that never ran costs nothing, unlike the nan statistics)."""
+        return float(sum(self.phases.get(phase, ())))
+
+    def phase_totals(self) -> Dict[str, float]:
+        """``{phase -> total seconds}`` over every recorded bucket."""
+        return {k: self.phase_total(k) for k in self.phases}
 
     def mean(self) -> float:
         """Mean recorded wall time; ``nan`` when nothing was profiled."""
@@ -128,6 +151,27 @@ class ProfileParameters:
 
     def p99(self) -> float:
         return self.percentile(99.0)
+
+
+@dataclasses.dataclass
+class _PhaseView:
+    """Phase-only view of a parent profile: :meth:`record_phase` forwards,
+    :meth:`record` is dropped.  A staged chain hands this to its per-stage
+    launches so the chain records ONE wall-time sample per launch (the
+    contract ``benchmarks/paper_tables.py`` averages over) while the
+    stages still contribute their transfer/compute phase breakdown."""
+
+    parent: ProfileParameters
+
+    @property
+    def enable(self) -> bool:
+        return self.parent.enable
+
+    def record(self, seconds: float) -> None:
+        pass
+
+    def record_phase(self, phase: str, seconds: float) -> None:
+        self.parent.record_phase(phase, seconds)
 
 
 class PortError(TypeError):
@@ -243,8 +287,14 @@ def _cache_key(tag: str, specs, donate: bool, static_key: Any, mesh,
 
 def aot_compile(fn: Callable, specs: Sequence[Any], *, tag: str,
                 donate_argnums: Tuple[int, ...] = (), static_key: Any = None,
-                mesh=None, in_shardings=None, out_shardings=None):
-    """AOT-compile ``fn`` for ``specs``; cached (the paper's "init once")."""
+                mesh=None, in_shardings=None, out_shardings=None,
+                profile: "ProfileParameters | None" = None):
+    """AOT-compile ``fn`` for ``specs``; cached (the paper's "init once").
+
+    ``profile`` records the trace+lower+compile wall time into the
+    ``"compile"`` phase bucket on a cache MISS (hits cost nothing and
+    record nothing), so per-launch phase breakdowns can separate one-time
+    compilation from steady-state compute."""
     key = _cache_key(tag, specs, bool(donate_argnums), static_key, mesh,
                      in_shardings, out_shardings)
     cached = _COMPILE_CACHE.get(key)
@@ -258,11 +308,14 @@ def aot_compile(fn: Callable, specs: Sequence[Any], *, tag: str,
     if out_shardings is not None:
         kwargs["out_shardings"] = out_shardings
     jitted = jax.jit(fn, donate_argnums=donate_argnums, **kwargs)
+    t0 = time.perf_counter()
     if mesh is not None:
         with mesh:
             compiled = jitted.lower(*specs).compile()
     else:
         compiled = jitted.lower(*specs).compile()
+    if profile is not None:
+        profile.record_phase("compile", time.perf_counter() - t0)
     _COMPILE_CACHE[key] = compiled
     return compiled
 
@@ -354,9 +407,18 @@ class Process:
         self.aux_handles: Dict[str, DataHandle] = {}
         self.launch_params: Any = None
         self.kernel: Optional[Callable] = None
+        #: input ports whose buffer may be donated to XLA even when the
+        #: handle does NOT double as the output — set by Pipeline.build's
+        #: residency plan on internal (device-resident, single-consumer)
+        #: edges so the upstream blob is consumed in place of being copied.
+        self.donate_ports: frozenset = frozenset()
+        #: name of this process's node in an owning Pipeline (set by
+        #: Pipeline.build); used to attribute donations in error messages
+        self.graph_name: Optional[str] = None
         self._compiled = None
         self._compiled_in_names: Tuple[str, ...] = ()
         self._compiled_donate_name: Optional[str] = None
+        self._compiled_donate_reason: Optional[str] = None  # 'in_place'|'port'
         self._initialized = False
         self._legacy_warned = False
 
@@ -542,11 +604,23 @@ class Process:
 
     def _donate_idx(self, in_names: Sequence[str]) -> Optional[int]:
         """Input position whose buffer the program may donate: the first
-        wired input whose handle IS the output handle (in-place)."""
+        wired input whose handle IS the output handle (in-place), else the
+        first input whose port the residency plan marked donatable
+        (:attr:`donate_ports` — a device-resident internal edge with this
+        process as its only consumer)."""
         for i, name in enumerate(in_names):
             if self.in_handles.get(name) == self.out_handle:
                 return i
+        for i, name in enumerate(in_names):
+            if name in self.donate_ports:
+                return i
         return None
+
+    def _donate_reason(self, name: str) -> str:
+        """Why input ``name`` is donated: genuine in-place wiring beats a
+        residency-plan donation when both hold."""
+        return ("in_place" if self.in_handles.get(name) == self.out_handle
+                else "port")
 
     def launchable(self) -> PureLaunchable:
         """Lower this process to its :class:`PureLaunchable` form — the one
@@ -603,12 +677,25 @@ class Process:
         self._compiled_in_names = la.in_names
         self._compiled_donate_name = (
             la.in_names[la.donate_idx] if la.donate_idx is not None else None)
+        self._compiled_donate_reason = (
+            self._donate_reason(self._compiled_donate_name)
+            if self._compiled_donate_name is not None else None)
         self._initialized = True
 
     def _check_donation(self) -> None:
         name = self._compiled_donate_name
-        if name is not None and \
-                self.out_handle != self.in_handles.get(name):
+        if name is None:
+            return
+        if self._compiled_donate_reason == "port":
+            # residency-plan donation: legal as long as the port is still
+            # marked donatable (the plan, not the handles, is the contract)
+            if name not in self.donate_ports:
+                raise DonatedBufferError(
+                    f"{type(self).__name__} was compiled with input {name!r} "
+                    "donated by the pipeline residency plan, but the port is "
+                    "no longer marked donatable; call init() to recompile.")
+            return
+        if self.out_handle != self.in_handles.get(name):
             raise DonatedBufferError(
                 f"{type(self).__name__} was compiled in-place (input "
                 f"{name!r} donated) but is now wired out_handle="
@@ -628,10 +715,18 @@ class Process:
         # it always did; order matches launchable()'s positional order
         in_blobs = []
         in_datas = []
+        t_up = time.perf_counter()
+        uploaded = False
         for name in self._compiled_in_names:
             d = app.getData(self.in_handles[name])
             if d.device_blob is None:
+                if d.donated_by is not None and \
+                        d.coherence is not Coherence.HOST_FRESH:
+                    # re-uploading would fabricate a zero blob for a buffer
+                    # a downstream stage consumed; fail with graph context
+                    d._raise_donated()
                 app.host2device(self.in_handles[name])
+                uploaded = True
             in_blobs.append(d.device_blob)
             in_datas.append(d)
         aux_blobs = []
@@ -639,23 +734,30 @@ class Process:
             d = app.getData(h)
             if d.device_blob is None:
                 app.host2device(h)
+                uploaded = True
             aux_blobs.append(d.device_blob)
+        if uploaded and profile is not None and profile.enable:
+            profile.record_phase("transfer", time.perf_counter() - t_up)
         t0 = time.perf_counter()
         out_blob = self._compiled(*in_blobs, *aux_blobs)
         if profile is not None and profile.enable:
             jax.block_until_ready(out_blob)
-            profile.record(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            profile.record(dt)
+            profile.record_phase("compute", dt)
         if self._compiled_donate_name is not None:
-            # the donated input's blob is dead; drop the stale reference
+            # the donated input's blob is dead; mark it so a later read
+            # raises DonatedBufferError with this stage's graph context
             in_datas[
                 self._compiled_in_names.index(self._compiled_donate_name)
-            ].device_blob = None
+            ].mark_donated(self.graph_name or type(self).__name__)
         app._set_device_blob(self.out_handle, out_blob)
 
     # -- streaming (beyond paper; see repro.core.stream) -----------------------
     def stream(self, datasets: Sequence[Any], batch: int = 1, *,
                depth: int = 2, sync: bool = False, sharded: bool = False,
                tail_waste_threshold: float = 0.5, split: str = "equal",
+               lanes: bool = False,
                profile: ProfileParameters | None = None) -> List[Any]:
         """Run many independent input Data sets through this process.
 
@@ -701,7 +803,7 @@ class Process:
         return stream_launch(self, datasets, batch=batch, depth=depth,
                              sync=sync, sharded=sharded,
                              tail_waste_threshold=tail_waste_threshold,
-                             split=split, profile=profile)
+                             split=split, lanes=lanes, profile=profile)
 
 
 class ProcessChain(Process):
@@ -846,6 +948,9 @@ class ProcessChain(Process):
         self._compiled_in_names = la.in_names
         self._compiled_donate_name = (
             la.in_names[la.donate_idx] if la.donate_idx is not None else None)
+        # a fused chain only donates when its output handle IS a chain input
+        self._compiled_donate_reason = (
+            "in_place" if self._compiled_donate_name is not None else None)
         self._initialized = True
 
     def _current_aux_handles(self) -> Tuple[DataHandle, ...]:
@@ -859,8 +964,10 @@ class ProcessChain(Process):
             self.init()
         if self.mode == "staged":
             t0 = time.perf_counter()
+            stage_prof = _PhaseView(profile) \
+                if profile is not None and profile.enable else None
             for s in self.stages:
-                s.launch()
+                s.launch(stage_prof)
             if profile is not None and profile.enable:
                 app = self.getApp()
                 jax.block_until_ready(app.getData(self.stages[-1].out_handle).device_blob)

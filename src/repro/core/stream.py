@@ -117,6 +117,28 @@ throughput** instead:
   executable already carries.  Uneven row counts are legal here: the
   per-device executables carry an explicit split vector, so neither the
   batch size nor a ragged tail needs to divide the device count.
+
+Per-device upload lanes (``lanes=True``) and phase profiling
+------------------------------------------------------------
+
+``lanes=True`` (requires ``sharded=True``) keeps the equal carve but
+uploads it on per-device double-buffered lanes — one pinned
+:class:`StreamQueue` per mesh device per input edge
+(:class:`_UploadLanes`) — so each device's host2device transfer is
+dispatched independently and overlaps every other device's upload and
+compute, instead of funnelling through one global mesh scatter.  Because
+the per-device executables carry explicit row counts, the mesh-sharded
+batch-divisibility constraint is lifted.  Outputs stay bit-identical.
+
+Passing a :class:`~repro.core.process.ProfileParameters` with
+``enable=True`` additionally records a per-launch phase breakdown into
+``profile.phases``: ``"transfer"`` (host→device upload, dispatch→landed),
+``"transfer_d2d"`` (a device-resident group moved device-to-device — the
+proof that pipeline-internal edges incur zero host2device traffic),
+``"compile"`` (AOT compiles on cache miss) and ``"compute"`` (launch
+dispatch→ready).  Phases are measured by daemon timer threads and overlap
+by design — they break down where wall time went, they do not partition
+it.
 """
 from __future__ import annotations
 
@@ -153,9 +175,18 @@ class StreamQueue:
     **callable placement** ``item -> device batch`` (the proportional
     split path passes :meth:`_BatchPlan.place`, which carves each stacked
     host blob into per-device sub-batches as a :class:`SplitBatch`).
+
+    ``profile`` (a :class:`~repro.core.process.ProfileParameters`) records
+    each dispatched placement's dispatch-to-landed wall time — measured
+    from a daemon timer thread, so the queue never blocks — into the
+    ``"transfer"`` phase bucket for host→device uploads, or
+    ``"transfer_d2d"`` for device-resident items that never touch the
+    host (the residency benchmark's proof that internal edges incur zero
+    host2device time).  Phases overlap compute by design.
     """
 
-    def __init__(self, items: Iterable[np.ndarray], device=None, depth: int = 2):
+    def __init__(self, items: Iterable[np.ndarray], device=None, depth: int = 2,
+                 profile: ProfileParameters | None = None):
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self._it = iter(items)
@@ -163,6 +194,7 @@ class StreamQueue:
         self._place = device if callable(device) else \
             (lambda item: jax.device_put(item, device))
         self._depth = depth
+        self._profile = profile
         self._fifo: deque = deque()
         self._exhausted = False
         self.transfers = 0  # number of device_puts issued (introspection)
@@ -187,10 +219,31 @@ class StreamQueue:
             except StopIteration:
                 self._exhausted = True
                 return
+            t0 = time.perf_counter()
             blob = self._place(item)
             self._fifo.append(blob)
             self._issued.append(weakref.ref(blob))
             self.transfers += 1
+            if self._profile is not None and self._profile.enable:
+                self._record_transfer(item, blob, t0)
+
+    def _record_transfer(self, item: Any, blob: Any, t0: float) -> None:
+        """Time one placement dispatch→landed from a daemon thread (phase
+        ``"transfer"`` for host blobs, ``"transfer_d2d"`` for device-
+        resident ones)."""
+        src = item.blob if isinstance(item, _SplitStack) else item
+        phase = "transfer" if isinstance(src, np.ndarray) else "transfer_d2d"
+        prof = self._profile
+
+        def timer():
+            try:
+                jax.block_until_ready(blob)
+            except Exception:
+                return      # blob donated/deleted before it landed
+            prof.record_phase(phase, time.perf_counter() - t0)
+
+        threading.Thread(target=timer, name="transfer-timer",
+                         daemon=True).start()
 
     def __iter__(self) -> Iterator[jax.Array]:
         return self
@@ -233,11 +286,11 @@ def _is_deleted(blob: jax.Array) -> bool:
 
 
 def _single_device_mesh(device: jax.Device) -> jax.sharding.Mesh:
-    """A trivial ``(data, model)`` mesh holding one device — the compile
-    target of per-device pinned executables (mirrors
-    ``CLapp.default_sharding``'s mesh shape so fingerprints stay uniform)."""
-    return jax.sharding.Mesh(
-        np.array([[device]], dtype=object), ("data", "model"))
+    """The compile target of per-device pinned executables — see
+    :func:`repro.launch.mesh.make_device_mesh` (shared so the lanes, the
+    aux replicas and the pinned executables all agree on one mesh shape)."""
+    from repro.launch.mesh import make_device_mesh  # lazy: keep core light
+    return make_device_mesh(device)
 
 
 class _SplitStack:
@@ -312,7 +365,8 @@ class BatchedProcess:
     """
 
     def __init__(self, process, batch: int, *, sharded: bool = False,
-                 device: Optional[jax.Device] = None):
+                 device: Optional[jax.Device] = None,
+                 profile: ProfileParameters | None = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
         if sharded and device is not None:
@@ -322,6 +376,7 @@ class BatchedProcess:
         self.batch = batch
         self.sharded = sharded
         self.device = device
+        self.profile = profile      # records "compile" phase on cache miss
         #: placement of stacked input batches (None = primary device); set
         #: by init() and reused by stream_launch as the StreamQueue target
         #: for every input edge
@@ -380,6 +435,7 @@ class BatchedProcess:
             mesh=mesh,
             in_shardings=in_shardings,
             out_shardings=out_shardings,
+            profile=self.profile,
         )
         self.launchable = la
         return self
@@ -418,10 +474,24 @@ class _BatchPlan:
     :meth:`launch` dispatches one pinned launch per device — recording
     every device's completion time back into the registry so the split
     self-calibrates.  Outputs are bit-identical to the equal split.
+
+    ``lanes=True`` (requires ``sharded=True``) keeps the EQUAL carve but
+    routes it through the same per-device pinned machinery: each stacked
+    batch is split into balanced per-device sub-batches uploaded on
+    per-device double-buffered lanes (one :class:`StreamQueue` per mesh
+    device in :func:`stream_launch` — see :class:`_UploadLanes`) instead
+    of one global mesh scatter, so every device's host2device upload
+    overlaps every other device's compute.  As a side effect the
+    batch-divisibility constraint of the mesh-sharded executable is
+    lifted (per-device executables carry explicit row counts).  Outputs
+    stay bit-identical; ``split="proportional"`` implies the same
+    per-device dispatch, so ``lanes`` only changes the ``"equal"`` path.
     """
 
     def __init__(self, process, batch: int, *, sharded: bool = False,
-                 tail_waste_threshold: float = 0.5, split: str = "equal"):
+                 tail_waste_threshold: float = 0.5, split: str = "equal",
+                 lanes: bool = False,
+                 profile: ProfileParameters | None = None):
         if split not in ("equal", "proportional"):
             raise ValueError(
                 f"unknown split policy {split!r}: expected 'equal' | "
@@ -431,12 +501,19 @@ class _BatchPlan:
                 "split='proportional' needs sharded=True — proportional "
                 "batch carving distributes work over the app mesh's data-"
                 "axis devices")
+        if lanes and not sharded:
+            raise ValueError(
+                "lanes=True needs sharded=True — per-device upload lanes "
+                "carve each batch over the app mesh's data-axis devices")
         self.process = process
         self.batch = batch
         self.sharded = sharded
         self.split = split
+        self.lanes = lanes
+        self.profile = profile
         self.tail_waste_threshold = float(tail_waste_threshold)
-        self.main = BatchedProcess(process, batch, sharded=sharded)
+        self.main = BatchedProcess(process, batch, sharded=sharded,
+                                   profile=profile)
         self._tails: dict = {}
         # proportional state: the data-axis devices, the per-(device, rows)
         # pinned executables, per-device aux replicas, and the live
@@ -452,11 +529,18 @@ class _BatchPlan:
     def proportional(self) -> bool:
         return self.split == "proportional"
 
+    @property
+    def per_device(self) -> bool:
+        """True when batches are carved into per-device pinned sub-batches
+        (proportional split OR equal-split upload lanes) instead of one
+        mesh-sharded launch."""
+        return self.proportional or self.lanes
+
     def init(self) -> "_BatchPlan":
-        if not self.proportional:
+        if not self.per_device:
             self.main.init()
             return self
-        # proportional mode never compiles the mesh-wide executable; it
+        # per-device mode never compiles the mesh-wide executable; it
         # resolves the launchable + data-axis devices and precompiles the
         # balanced full-batch executables (the cold-start warmup set)
         p = self.process
@@ -464,13 +548,15 @@ class _BatchPlan:
         mesh = app.mesh
         if mesh is None:
             raise RuntimeError(
-                "split='proportional' needs the app mesh (CLapp.init "
-                "builds one over the selected devices)")
+                "per-device batch carving (split='proportional' / "
+                "lanes=True) needs the app mesh (CLapp.init builds one "
+                "over the selected devices)")
         other = {a: int(s) for a, s in mesh.shape.items()
                  if a != "data" and int(s) != 1}
         if other:
             raise ValueError(
-                "split='proportional' needs a pure data-parallel mesh; "
+                "per-device batch carving (split='proportional' / "
+                "lanes=True) needs a pure data-parallel mesh; "
                 f"axes {sorted(other)} are non-trivial")
         for name in p.kernel_names:
             app.kernels.load(name)
@@ -481,18 +567,18 @@ class _BatchPlan:
 
     @property
     def launchable(self) -> PureLaunchable:
-        return self._la if self.proportional else self.main.launchable
+        return self._la if self.per_device else self.main.launchable
 
     @property
     def batch_sharding(self):
-        return None if self.proportional else self.main.batch_sharding
+        return None if self.per_device else self.main.batch_sharding
 
     @property
     def queue_target(self):
         """What the per-edge :class:`StreamQueue` s place batches with:
-        the proportional placement callable, the mesh sharding, or the
+        the per-device placement callable, the mesh sharding, or the
         primary device."""
-        if self.proportional:
+        if self.per_device:
             return self.place
         return self.main.batch_sharding or self.process.getApp().device
 
@@ -511,23 +597,23 @@ class _BatchPlan:
         waste = (self.batch - rows) / self.batch
         if waste <= self.tail_waste_threshold:
             return self.batch                      # cheap enough: pad
-        if self.proportional:
+        if self.per_device:
             return rows                 # uneven carve: any row count works
         if self.sharded and rows % self._data_axis() != 0:
             return self.batch                      # devices need whole items
         return rows                                # compile a tail executable
 
     def executable(self, rows: int) -> BatchedProcess:
-        if self.proportional:
+        if self.per_device:
             raise RuntimeError(
-                "proportional plans have no single batch executable; use "
+                "per-device plans have no single batch executable; use "
                 "launch()/precompile() (per-device pinned executables)")
         if rows == self.batch:
             return self.main
         bp = self._tails.get(rows)
         if bp is None:
-            bp = BatchedProcess(self.process, rows,
-                                sharded=self.sharded).init()
+            bp = BatchedProcess(self.process, rows, sharded=self.sharded,
+                                profile=self.profile).init()
             self._tails[rows] = bp
         return bp
 
@@ -543,7 +629,7 @@ class _BatchPlan:
         each (device, rows) pair compiles at most once (global cache), so
         the cost amortizes away but is not strictly zero."""
         rows = self.launch_rows(rows)
-        if not self.proportional:
+        if not self.per_device:
             self.executable(rows)
             return
         from repro.launch.mesh import DeviceProfileRegistry
@@ -561,7 +647,8 @@ class _BatchPlan:
         key = (device.id, rows)
         bp = self._pinned.get(key)
         if bp is None:
-            bp = BatchedProcess(self.process, rows, device=device).init()
+            bp = BatchedProcess(self.process, rows, device=device,
+                                profile=self.profile).init()
             self._pinned[key] = bp
         return bp
 
@@ -571,8 +658,15 @@ class _BatchPlan:
         cold/small-batch fallback).  A device explicitly measured/seeded at
         rate 0 (the "broken accelerator stays in the pool" case) is
         excluded from the balanced fallback too — only if EVERY device is
-        zero-rated (degenerate) does the balance span the full pool."""
+        zero-rated (degenerate) does the balance span the full pool.
+
+        ``lanes=True`` with the equal split ALWAYS returns the plain
+        balanced vector over every device — the lanes change the upload
+        topology, not the carve policy."""
         devices = self._devices
+        if not self.proportional:       # lanes + equal split: balanced
+            from repro.launch.mesh import DeviceProfileRegistry
+            return DeviceProfileRegistry.balanced(rows, len(devices))
         vec = self.registry.split(rows, devices)
         if vec is not None:
             return vec
@@ -599,9 +693,9 @@ class _BatchPlan:
         never disagree on the carve."""
         rows = self.launch_rows(len(items))
         stacks = [
-            stack_host_blobs(_pad_rows([it[e] for it in items], rows), lay)
+            _stack_blobs(_pad_rows([it[e] for it in items], rows), lay)
             for e, lay in enumerate(self.launchable.in_layouts)]
-        if not self.proportional:
+        if not self.per_device:
             return stacks
         split = self.split_vector(rows)
         return [_SplitStack(s, split) for s in stacks]
@@ -632,10 +726,15 @@ class _BatchPlan:
         executable for plain stacked blobs, or one pinned launch per
         device for a :class:`SplitBatch` — dispatched asynchronously so
         the devices compute concurrently, with a completion timer per
-        device feeding measured items/sec back into the registry."""
+        device feeding measured items/sec back into the registry (and the
+        ``"compute"`` phase bucket when the plan carries a profile)."""
         if not isinstance(dev_blobs[0], SplitBatch):
-            return self.executable(int(dev_blobs[0].shape[0]))(
+            t0 = time.perf_counter()
+            out = self.executable(int(dev_blobs[0].shape[0]))(
                 tuple(dev_blobs), aux_blobs)
+            if self.profile is not None and self.profile.enable:
+                self._time_completion(None, 0, t0, out)
+            return out
         sb0 = dev_blobs[0]
         out_parts = []
         for j, (dev, c) in enumerate(zip(sb0.devices, sb0.counts)):
@@ -658,12 +757,13 @@ class _BatchPlan:
 
     def prepare_aux(self) -> List[jax.Array]:
         """Device aux blobs for this plan's launches (see
-        :func:`_prepare_aux`).  Proportional plans keep the aux at its
-        stored placement and replicate per device lazily —
-        :meth:`_device_aux` — instead of mesh-replicating up front."""
+        :func:`_prepare_aux`).  Per-device plans (proportional / lanes)
+        keep the aux at its stored placement and replicate per device
+        lazily — :meth:`_device_aux` — instead of mesh-replicating up
+        front."""
         app = self.process.getApp()
         self._base_aux = _prepare_aux(
-            app, self.launchable, self.sharded and not self.proportional)
+            app, self.launchable, self.sharded and not self.per_device)
         return self._base_aux
 
     def _device_aux(self, device: jax.Device,
@@ -673,23 +773,34 @@ class _BatchPlan:
             return ()
         cached = self._device_aux_cache.get(device.id)
         if cached is None:
-            sharding = jax.sharding.NamedSharding(
-                _single_device_mesh(device), jax.sharding.PartitionSpec())
-            cached = tuple(jax.device_put(b, sharding) for b in aux_blobs)
+            from repro.launch.mesh import pinned_sharding
+            cached = tuple(jax.device_put(b, pinned_sharding(device))
+                           for b in aux_blobs)
             self._device_aux_cache[device.id] = cached
         return cached
 
     # -------------------------------------------------- live rate recording
-    def _time_completion(self, device: jax.Device, items: int, t0: float,
-                         out: jax.Array) -> None:
+    def _time_completion(self, device: Optional[jax.Device], items: int,
+                         t0: float, out: Any) -> None:
         """Record ``items / (ready - t0)`` into the registry once this
         device's output is ready — from a daemon thread, so the dispatch
-        loop (and the double buffer) never blocks on a timer."""
+        loop (and the double buffer) never blocks on a timer.  With a
+        profile attached, the same dispatch→ready wall time also lands in
+        the ``"compute"`` phase bucket (``device=None`` records the phase
+        only — the single-executable path has no per-device rate)."""
         registry = self.registry
+        prof = self.profile
 
         def timer():
-            jax.block_until_ready(out)
-            registry.record(device, items, time.perf_counter() - t0)
+            try:
+                jax.block_until_ready(out)
+            except Exception:
+                return      # output donated/deleted before it was ready
+            dt = time.perf_counter() - t0
+            if device is not None:
+                registry.record(device, items, dt)
+            if prof is not None and prof.enable:
+                prof.record_phase("compute", dt)
 
         t = threading.Thread(target=timer, name="device-profile-timer",
                              daemon=True)
@@ -709,14 +820,50 @@ class _BatchPlan:
         self._timers = [t for t in self._timers if t.is_alive()]
 
 
-def _host_blob_of(data: Data) -> np.ndarray:
-    """Authoritative host blob of one input Data (syncing device→host first
-    if only the device copy is fresh)."""
+def _host_blob_of(data: Data) -> "np.ndarray | jax.Array":
+    """Authoritative blob of one input Data.  Host arrays present → packed
+    host blob (the classic path).  A Data that lives ONLY on the device
+    (device-resident pipeline output, or any device-fresh Data whose host
+    arrays were never materialised) returns its device blob directly when
+    it sits whole on a single device — the device-to-device streaming fast
+    path: chained ``stream()`` calls never bounce intermediates through
+    the host (:func:`_stack_blobs` stacks them in place).  Multi-device
+    blobs still sync (stacking sharded rows device-side would shuffle
+    items across devices)."""
     if data.layout is None:
         data.plan()
     if any(a.host is None for a in data):
+        blob = data.device_blob
+        if (isinstance(blob, jax.Array) and not _is_deleted(blob)
+                and blob.ndim == 1 and len(blob.devices()) == 1):
+            return blob                         # device-resident: no host trip
         data.sync_to_host()  # raises if there is no device copy either
     return data.pack_host()
+
+
+def _stack_blobs(blobs: Sequence["np.ndarray | jax.Array"],
+                 layout) -> "np.ndarray | jax.Array":
+    """Stack one group's per-item blobs into a ``(rows, total_bytes)``
+    batch.  A group resident entirely on ONE device stacks there
+    (``jnp.stack`` — the device-to-device edge: zero host2device traffic,
+    and the downstream :class:`StreamQueue` placement becomes a
+    device-side move recorded under the ``"transfer_d2d"`` phase).  Mixed
+    or host groups take the validated host path, pulling any stray device
+    blobs back once."""
+    if all(isinstance(b, jax.Array) for b in blobs):
+        devices = {d for b in blobs for d in b.devices()}
+        if len(devices) == 1:
+            for b in blobs:
+                if tuple(b.shape) != (layout.total_bytes,) or \
+                        b.dtype != np.uint8:
+                    raise ValueError(
+                        f"device blob shape {tuple(b.shape)}/{b.dtype} does "
+                        f"not match the arena layout "
+                        f"({layout.total_bytes},)/uint8")
+            import jax.numpy as jnp
+            return jnp.stack(blobs)
+    host = [np.asarray(b) if isinstance(b, jax.Array) else b for b in blobs]
+    return stack_host_blobs(host, layout)
 
 
 def normalize_stream_item(item: Any, la: PureLaunchable,
@@ -829,6 +976,98 @@ class _JoinFeed:
             yield stacked
 
 
+class _Fanout:
+    """Lockstep tee of one iterator into ``n`` branches.  Items are
+    buffered only while some branch still needs them — the head is
+    released once EVERY branch has consumed it, so memory stays bounded
+    by the branches' skew (lane queue depth), not stream length."""
+
+    def __init__(self, it: Iterator[Any], n: int):
+        self._it = iter(it)
+        self._buf: deque = deque()
+        self._base = 0              # absolute stream index of _buf[0]
+        self._pos = [0] * n         # absolute per-branch read positions
+        self._done = False
+
+    def branch(self, j: int) -> Iterator[Any]:
+        while True:
+            idx = self._pos[j]
+            while idx - self._base >= len(self._buf):
+                if self._done:
+                    return
+                try:
+                    self._buf.append(next(self._it))
+                except StopIteration:
+                    self._done = True
+                    return
+            item = self._buf[idx - self._base]
+            self._pos[j] = idx + 1
+            while self._buf and self._base < min(self._pos):
+                self._buf.popleft()       # every branch is past the head
+                self._base += 1
+            yield item
+
+
+class _UploadLanes:
+    """Per-device double-buffered upload lanes for ONE input edge.
+
+    The ``lanes=True`` upload topology: instead of one global mesh
+    scatter (``sharded=True``) or one placement call carving the whole
+    stacked blob (:meth:`_BatchPlan.place`), the edge's feed of
+    :class:`_SplitStack` groups is teed across one pinned
+    :class:`StreamQueue` PER mesh device — lane *j* uploads rows
+    ``off_j : off_j + split[j]`` of every group to its device, so each
+    device's host2device transfer is dispatched (and double-buffered)
+    independently, overlapping every other device's upload and compute.
+    ``__next__`` zips the lanes' heads back into one :class:`SplitBatch`
+    for :meth:`_BatchPlan.launch` (zero-row lanes ship an empty slice to
+    stay in lockstep but are excluded from the batch).  Quacks like
+    :class:`StreamQueue` where ``stream_launch`` cares: iteration +
+    ``sync()``.
+    """
+
+    def __init__(self, plan: _BatchPlan, feed: Iterator[_SplitStack],
+                 depth: int = 2,
+                 profile: ProfileParameters | None = None):
+        devices = plan._devices
+        if not devices:
+            raise RuntimeError("_UploadLanes needs an initialized per-device "
+                               "plan (lanes=True)")
+        # one extra branch re-reads each group's split vector for __next__
+        fan = _Fanout(feed, len(devices) + 1)
+
+        def lane_rows(j: int) -> Iterator[Any]:
+            for ss in fan.branch(j):
+                off = sum(ss.split[:j])
+                yield ss.blob[off:off + ss.split[j]]
+
+        from repro.launch.mesh import pinned_sharding
+        self._devices = devices
+        self._lanes = [
+            StreamQueue(lane_rows(j), device=pinned_sharding(dev),
+                        depth=depth, profile=profile)
+            for j, dev in enumerate(devices)]
+        self._splits = fan.branch(len(devices))
+
+    def __iter__(self) -> "_UploadLanes":
+        return self
+
+    def __next__(self) -> SplitBatch:
+        ss = next(self._splits)
+        heads = [next(q) for q in self._lanes]
+        parts, counts, devs = [], [], []
+        for blob, c, dev in zip(heads, ss.split, self._devices):
+            if c:
+                parts.append(blob)
+                counts.append(c)
+                devs.append(dev)
+        return SplitBatch(parts, counts, devs)
+
+    def sync(self) -> None:
+        for q in self._lanes:
+            q.sync()
+
+
 def _prepare_aux(app, la: PureLaunchable, sharded: bool) -> List[jax.Array]:
     """Device aux blobs in positional order, replicated over the mesh when
     sharded.  Shared by stream_launch and the serving loop."""
@@ -856,6 +1095,7 @@ def _prepare_aux(app, la: PureLaunchable, sharded: bool) -> List[jax.Array]:
 def stream_launch(process, datasets: Sequence[Any], *, batch: int = 1,
                   depth: int = 2, sync: bool = False, sharded: bool = False,
                   tail_waste_threshold: float = 0.5, split: str = "equal",
+                  lanes: bool = False,
                   profile: ProfileParameters | None = None) -> List[Data]:
     """Run ``datasets`` through ``process`` batched + double-buffered.
 
@@ -863,8 +1103,8 @@ def stream_launch(process, datasets: Sequence[Any], *, batch: int = 1,
     (including multi-input items: one Data per input edge, as a mapping or
     tuple), the module docstring for the ``sharded=True`` placement
     contract, the per-edge join feeds, the ragged-tail policy
-    (``tail_waste_threshold``) and the ``split="proportional"`` batch-
-    carving policy.
+    (``tail_waste_threshold``), the ``split="proportional"`` batch-
+    carving policy and the ``lanes=True`` per-device upload lanes.
     """
     datasets = list(datasets)
     if not datasets:
@@ -872,7 +1112,7 @@ def stream_launch(process, datasets: Sequence[Any], *, batch: int = 1,
     app = process.getApp()
     plan = _BatchPlan(process, batch, sharded=sharded,
                       tail_waste_threshold=tail_waste_threshold,
-                      split=split).init()
+                      split=split, lanes=lanes, profile=profile).init()
     la = plan.launchable
 
     aux_blobs = plan.prepare_aux()
@@ -900,8 +1140,16 @@ def stream_launch(process, datasets: Sequence[Any], *, batch: int = 1,
             yield buf
 
     feed = _JoinFeed(plan, groups())
-    queues = [StreamQueue(feed.feed(e), device=plan.queue_target, depth=depth)
-              for e in range(la.n_inputs)]
+    if plan.lanes:
+        # per-device upload lanes: one pinned double-buffered queue per
+        # mesh device per edge, instead of one placement point per edge
+        queues: List[Any] = [
+            _UploadLanes(plan, feed.feed(e), depth=depth, profile=profile)
+            for e in range(la.n_inputs)]
+    else:
+        queues = [StreamQueue(feed.feed(e), device=plan.queue_target,
+                              depth=depth, profile=profile)
+                  for e in range(la.n_inputs)]
     t0 = time.perf_counter()
     out_batches: List[Any] = []
     for dev_blobs in zip(*queues):    # batch i+1 transfers while i computes

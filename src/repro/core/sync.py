@@ -36,6 +36,13 @@ class Coherence(enum.Enum):
     IN_SYNC = "sync"           # both copies identical
     EMPTY = "empty"            # no storage attached yet
     TRANSFERRING = "h2d"       # host->device transfer dispatched, not awaited
+    # Pipeline-internal edge state: the blob lives on the device for its
+    # whole useful life and is *expected* never to land on the host — the
+    # next stage consumes (and usually donates) it directly.  Distinct from
+    # DEVICE_FRESH so sync/debug tooling can tell "host copy merely stale"
+    # from "host copy intentionally never materialised"; reading it is
+    # still legal (sync_to_host demotes it to IN_SYNC like any device copy).
+    DEVICE_RESIDENT = "resident"
 
 
 def resolve_source(sync: SyncSource, coherence: Coherence) -> str:
@@ -45,8 +52,8 @@ def resolve_source(sync: SyncSource, coherence: Coherence) -> str:
     if sync is SyncSource.HOST_ONLY:
         return "host"
     # AUTO
-    if coherence in (Coherence.DEVICE_FRESH, Coherence.IN_SYNC,
-                     Coherence.TRANSFERRING):
+    if coherence in (Coherence.DEVICE_FRESH, Coherence.DEVICE_RESIDENT,
+                     Coherence.IN_SYNC, Coherence.TRANSFERRING):
         # an in-flight device copy is authoritative: reading it simply
         # blocks until the dispatched transfer lands
         return "device"

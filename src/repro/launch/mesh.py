@@ -61,6 +61,26 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return make_data_mesh(jax.devices())
 
 
+def make_device_mesh(device: jax.Device,
+                     axis_names: Tuple[str, str] = ("data", "model"),
+                     ) -> jax.sharding.Mesh:
+    """A trivial single-device ``(data, model)`` mesh — the compile and
+    placement target of per-device pinned executables and upload lanes
+    (:mod:`repro.core.stream`).  Mirrors ``CLapp.default_sharding``'s mesh
+    shape so compile-cache fingerprints stay uniform across the default,
+    mesh-sharded and pinned variants."""
+    return jax.sharding.Mesh(
+        np.array([[device]], dtype=object), axis_names)
+
+
+def pinned_sharding(device: jax.Device) -> jax.sharding.NamedSharding:
+    """Fully-replicated ``NamedSharding`` over :func:`make_device_mesh` —
+    where a per-device sub-batch (upload lane) or per-device aux replica
+    lands."""
+    return jax.sharding.NamedSharding(
+        make_device_mesh(device), jax.sharding.PartitionSpec())
+
+
 # ---------------------------------------------------------------------------
 # Per-device throughput profiles (EngineCL-style measured load balancing)
 # ---------------------------------------------------------------------------

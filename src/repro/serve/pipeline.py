@@ -27,7 +27,11 @@ executor in a request/response loop —
   — while batch *i* computes.  With ``split="proportional"`` each served
   batch is instead carved into per-device sub-batches sized by the
   measured throughput in ``app.device_profiles`` (equal fallback while
-  profiles are cold); see :mod:`repro.core.stream`.
+  profiles are cold); see :mod:`repro.core.stream`.  ``lanes=True`` keeps
+  the equal carve but routes it through the same per-device machinery
+  (one pinned sub-batch + executable per mesh device), so served batch
+  sizes need not divide the device count and each device's upload is
+  dispatched independently.
 * **Flush timeout** — with ``flush_timeout`` (seconds) set, a background
   drain thread serves continuously: full batches launch immediately, and
   a PARTIAL batch is flushed once its oldest request has waited
@@ -107,7 +111,7 @@ class PipelineServer:
 
     def __init__(self, pipeline, *, batch: int = 8, sharded: bool = False,
                  depth: int = 2, tail_waste_threshold: float = 0.5,
-                 split: str = "equal",
+                 split: str = "equal", lanes: bool = False,
                  flush_timeout: Optional[float] = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
@@ -120,6 +124,7 @@ class PipelineServer:
         self.depth = depth
         self.tail_waste_threshold = tail_waste_threshold
         self.split = split
+        self.lanes = lanes
         self.flush_timeout = flush_timeout
         self._pending: Deque[_Request] = deque()
         self._next_rid = 0
@@ -146,7 +151,7 @@ class PipelineServer:
         self._plan = _BatchPlan(
             built.executor, self.batch, sharded=self.sharded,
             tail_waste_threshold=self.tail_waste_threshold,
-            split=self.split).init()
+            split=self.split, lanes=self.lanes).init()
         # aux wiring is fixed for the server's lifetime: prepare (and, when
         # sharded, mesh-replicate) the aux blobs ONCE, not per drain
         app = built.executor.getApp()

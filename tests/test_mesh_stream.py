@@ -531,6 +531,119 @@ def test_proportional_uneven_batch_allowed(rng):
                                       g.get_ndarray(0).host)
 
 
+# ---------------------------------------------------------------------------
+# per-device upload lanes (ISSUE 6: residency + lanes)
+# ---------------------------------------------------------------------------
+
+def test_lanes_require_sharded(rng):
+    app = CLapp().init()
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    p = Scale(app)
+    p.in_handle, p.out_handle = app.addData(d_in), app.addData(d_out)
+    p.set_launch_parameters(1.0)
+    with pytest.raises(ValueError, match="sharded"):
+        p.stream(_mk_datasets(rng, 4), batch=2, lanes=True)
+
+
+@needs_8_devices
+def test_lanes_stream_bit_identical_and_spread(rng):
+    """lanes=True: every mesh device gets its own pinned upload lane; the
+    carved sub-batches land bit-identical to sequential launches and the
+    per-item outputs cover all 8 devices."""
+    app = CLapp().init()
+    datasets = _mk_datasets(rng, 16)
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = Scale(app)
+    p.set_in_handle(h_in); p.set_out_handle(h_out)
+    p.set_launch_parameters(-1.5)
+    p.init()
+    want = _sequential(app, p, h_in, h_out, d_in, d_out, datasets)
+
+    got = p.stream(datasets, batch=8, sharded=True, lanes=True, sync=True)
+    assert len(got) == len(datasets)
+    out_devices = set()
+    for i, o in enumerate(got):
+        np.testing.assert_array_equal(
+            o.get_ndarray(0).host, want[i], err_msg=f"dataset {i}")
+        out_devices |= set(o.device_blob.devices())
+    assert out_devices == set(app.devices), \
+        "lane streaming must use every mesh device"
+
+
+@needs_8_devices
+def test_lanes_lift_batch_divisibility(rng):
+    """The plain equal sharded split rejects batch % n_devices != 0; lanes
+    carve a balanced (possibly uneven) vector instead, so the same call
+    works with lanes=True — and stays bit-identical to unsharded."""
+    app = CLapp().init()
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    h_in, h_out = app.addData(d_in), app.addData(d_out)
+    p = Scale(app)
+    p.in_handle = h_in; p.out_handle = h_out
+    p.set_launch_parameters(2.5)
+    p.init()
+    datasets = _mk_datasets(rng, 6)
+    with pytest.raises(ValueError, match="divisible"):
+        p.stream(datasets, batch=3, sharded=True)
+    want = p.stream(datasets, batch=3, sync=True)
+    got = p.stream(datasets, batch=3, sharded=True, lanes=True, sync=True)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w.get_ndarray(0).host,
+                                      g.get_ndarray(0).host)
+
+
+@needs_8_devices
+def test_lanes_transfer_phase_one_record_per_lane(rng):
+    """Phase accounting: with lanes every (batch, device) pair is one
+    pinned host2device transfer — 16 items at batch=8 over 8 lanes makes
+    2 * 8 transfer records, plus one compute record per device launch."""
+    from repro.core import ProfileParameters
+    app = CLapp().init()
+    datasets = _mk_datasets(rng, 16)
+    d_in = XData({"img": np.zeros((8, 8), np.float32)})
+    d_out = XData(d_in, copy_values=False)
+    p = Scale(app)
+    p.in_handle, p.out_handle = app.addData(d_in), app.addData(d_out)
+    p.set_launch_parameters(3.0)
+    p.init()
+    prof = ProfileParameters(enable=True)
+    p.stream(datasets, batch=8, sharded=True, lanes=True, sync=True,
+             profile=prof)
+    n_batches, n_lanes = 2, 8
+    assert len(prof.phases.get("transfer", ())) == n_batches * n_lanes
+    assert len(prof.phases.get("compute", ())) == n_batches * n_lanes
+    assert prof.phase_total("transfer") > 0
+
+
+@needs_8_devices
+def test_lanes_joined_stream_row_aligned(rng):
+    """Fan-in join under lanes: both edges are carved by the SAME balanced
+    vector and fed through per-device lanes, so row alignment holds and
+    stream AND serve match per-item launches bit for bit."""
+    app = CLapp().init()
+    a = Scale(app).bind(infile="x", outfile="lhs", params=2.0)
+    j = MulTwo(app).bind(infile="lhs", outfile="prod", rhs="r")
+    pipe = Pipeline.from_graph(app, [a, j], output="prod")
+    lhs = _mk_datasets(rng, 12)
+    rhs = _mk_datasets(rng, 12)
+    items = [{"x": l, "r": r} for l, r in zip(lhs, rhs)]
+    want = [pipe.run(it).get_ndarray(0).host.copy() for it in items]
+
+    got = pipe.run(items, mode="stream", batch=8, sharded=True, lanes=True)
+    assert len(got) == 12
+    for i, o in enumerate(got):
+        np.testing.assert_array_equal(o.get_ndarray(0).host, want[i],
+                                      err_msg=f"item {i}")
+    served = pipe.run(items, mode="serve", batch=8, sharded=True, lanes=True)
+    for i, o in enumerate(served):
+        np.testing.assert_array_equal(o.get_ndarray(0).host, want[i],
+                                      err_msg=f"served item {i}")
+
+
 @needs_8_devices
 def test_single_device_traits_on_multi_device_host(rng):
     """DeviceTraits(count=1) on an 8-device host: the mesh is trivial and
