@@ -1,10 +1,21 @@
 """LM substrate micro-benchmarks on the host device: smoke-scale train-step
 and decode-step wall times for each arch family (CPU; the production-scale
-numbers are the dry-run roofline bounds)."""
+numbers are the dry-run roofline bounds), plus the Pipeline-path decode
+benchmark — tokens/sec through :class:`repro.processes.lm.DecodeSession`
+with the per-phase (transfer / compile / compute) breakdown proving the
+persistent cache edge incurs ZERO host2device transfer after step 0.
+
+    PYTHONPATH=src python -m benchmarks.lm_step            # full, writes
+                                                           # BENCH_lm_decode.json
+    PYTHONPATH=src python -m benchmarks.lm_step --smoke    # CI smoke
+"""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
-from typing import List
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +27,12 @@ from repro.train import TrainConfig, make_train_state, make_train_step
 
 ARCHS = ["qwen3-14b", "granite-moe-1b-a400m", "rwkv6-3b", "zamba2-2.7b",
          "whisper-large-v3"]
+
+# Pipeline-path decode: one transformer, one recurrent family, and the
+# whisper encoder→decoder fan-in.  Smoke keeps the two shapes that exercise
+# distinct graph topologies (linear prefill vs fan-in prefill).
+DECODE_ARCHS = ["qwen3-14b", "rwkv6-3b", "whisper-large-v3"]
+SMOKE_DECODE_ARCHS = ["qwen3-14b", "whisper-large-v3"]
 
 
 def _batch(cfg, B, S, rng):
@@ -63,3 +80,104 @@ def rows() -> List[str]:
         dt = (time.perf_counter() - t0) / 5
         out.append(f"lm_decode_step_{arch},{dt * 1e6:.0f},smoke_cfg")
     return out
+
+
+def _decode_point(arch: str, *, batch: int, steps: int,
+                  prompt_len: int) -> Dict:
+    """One DecodeSession run: prefill + ``steps`` decode launches.
+
+    Returns tokens/sec plus two phase breakdowns: ``warmup`` (the prefill
+    graph and the first decode step — uploads and AOT compiles land here)
+    and ``steady`` (every later step — must contain ONLY ``compute``: the
+    state Data is device-resident and donated step-to-step, so the cache
+    edge moves zero bytes host→device after step 0)."""
+    from repro.core.app import CLapp
+    from repro.core.data import Coherence
+    from repro.core.process import ProfileParameters
+    from repro.processes.lm import DecodeSession
+
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    app = CLapp().init()
+    enc_len = 16 if cfg.family == "encdec" else None
+    rng = np.random.default_rng(0)
+    sess = DecodeSession(app, model, params, batch=batch,
+                         max_len=prompt_len + steps + 2, enc_len=enc_len)
+
+    tokens = np.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
+                        np.int32)
+    frames = None
+    if enc_len is not None:
+        frames = rng.standard_normal(
+            (batch, enc_len, cfg.d_model)).astype(np.float32)
+
+    warm = ProfileParameters(enable=True)
+    sess.prefill(tokens, frames=frames, profile=warm)
+    sess.step(warm)                       # decode-step compile lands here
+
+    steady = ProfileParameters(enable=True)
+    t0 = time.perf_counter()
+    for _ in range(steps - 1):
+        sess.step(steady)
+    sess.tokens()                         # sync on the (B, 1) token view
+    dt = time.perf_counter() - t0
+
+    state = sess.state
+    assert steady.phase_total("transfer") == 0.0, \
+        f"{arch}: host2device on the cache edge after step 0"
+    assert steady.phase_total("compile") == 0.0, \
+        f"{arch}: recompile after step 0"
+    assert state.coherence is Coherence.DEVICE_RESIDENT
+    assert all(a.host is None for a in state._arrays)   # never left device
+
+    def _phases(p: ProfileParameters) -> Dict[str, Dict[str, float]]:
+        return {k: {"total_s": round(sum(v), 6), "count": len(v)}
+                for k, v in sorted(p.phases.items())}
+
+    return {"arch": arch, "family": cfg.family, "batch": batch,
+            "steps": steps, "prompt_len": prompt_len,
+            "tok_per_s": round(batch * (steps - 1) / dt, 3),
+            "us_per_step": round(dt / (steps - 1) * 1e6, 1),
+            "warmup_phases": _phases(warm),
+            "steady_phases": _phases(steady),
+            "steady_transfer_s": steady.phase_total("transfer"),
+            "device_resident": True}
+
+
+def decode_rows(*, smoke: bool = False) -> List[str]:
+    """Tokens/sec decode through the Pipeline path, CSV rows + BENCH json."""
+    batch = 2 if smoke else 4
+    steps = 6 if smoke else 32
+    archs = SMOKE_DECODE_ARCHS if smoke else DECODE_ARCHS
+    bench = {"name": "lm_decode", "batch": batch, "steps": steps,
+             "note": ("DecodeSession: persistent arena-backed cache, "
+                      "device-resident + donated step-to-step; "
+                      "steady_phases proves zero host2device transfer "
+                      "on the cache edge after step 0"),
+             "results": []}
+    out = []
+    for arch in archs:
+        point = _decode_point(arch, batch=batch, steps=steps, prompt_len=4)
+        bench["results"].append(point)
+        out.append(
+            f"lm_decode_pipeline_{arch},{point['us_per_step']:.0f},"
+            f"tok_per_s={point['tok_per_s']};"
+            f"steady_transfer_s={point['steady_transfer_s']}")
+    if not smoke:
+        path = os.path.join(os.path.dirname(__file__),
+                            "BENCH_lm_decode.json")
+        with open(path, "w") as f:
+            json.dump(bench, f, indent=2)
+            f.write("\n")
+    return out
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for r in decode_rows(smoke="--smoke" in sys.argv):
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm stream mesh serve fanin]
+    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm lm_decode stream mesh serve fanin]
 """
 from __future__ import annotations
 
@@ -11,7 +11,8 @@ import sys
 
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "fig2", "overhead", "roofline",
-                                  "lm", "stream", "mesh", "serve", "fanin"}
+                                  "lm", "lm_decode", "stream", "mesh",
+                                  "serve", "fanin"}
     print("name,us_per_call,derived")
     rows = []
     if "table1" in which:
@@ -29,6 +30,9 @@ def main() -> None:
     if "lm" in which:
         from benchmarks.lm_step import rows as lm_rows
         rows += lm_rows()
+    if "lm_decode" in which:
+        from benchmarks.lm_step import decode_rows
+        rows += decode_rows()
     if "stream" in which:
         from benchmarks.stream_throughput import rows as stream_rows
         rows += stream_rows()

@@ -111,6 +111,13 @@ class Data:
         self.residency: str = "host"
         self.residency_edge: Optional[str] = None   # edge name in the graph
         self.producer_name: Optional[str] = None    # stage that writes it
+        # persistent-state contract (decode caches, recurrent state): this
+        # Data lives on the device ACROSS launches even when it sits on a
+        # graph input/output edge (bound as both the input and the output
+        # of a step process).  Pipeline.build keeps residency='device' for
+        # it, so every step's result is stamped Coherence.DEVICE_RESIDENT
+        # and run(sync=False) never round-trips it through the host.
+        self.persistent: bool = False
         # set by Process.launch when a downstream stage donated this blob
         # to XLA; reads must fail loudly (with graph context when known)
         self.donated_by: Optional[str] = None

@@ -674,7 +674,12 @@ class Pipeline:
             d.producer_name = node_names[pi] if pi is not None else None
             internal = (edge not in self._input_edges
                         and edge != self._output_edge)
-            d.residency = "device" if internal else "host"
+            # persistent-state Data (a decode cache bound as both the input
+            # and the output edge of a step graph) keeps the device path
+            # even though it sits on an input/output edge: the caller never
+            # reads it between steps, so there is no pinned host round-trip
+            # to preserve and every step result stays DEVICE_RESIDENT.
+            d.residency = "device" if (internal or d.persistent) else "host"
             residency[edge] = d.residency
             if internal and not self.fuse and len(procs) > 1:
                 cons = consumers.get(edge, ())

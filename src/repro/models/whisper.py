@@ -170,8 +170,15 @@ class WhisperModel:
 
     def prefill(self, params, frames, tokens, cache):
         """Encode audio, precompute cross K/V, prefill decoder self-cache."""
+        return self.prefill_from_enc(params, self.encode(params, frames),
+                                     tokens, cache)
+
+    def prefill_from_enc(self, params, enc, tokens, cache):
+        """Decoder-side prefill from precomputed encoder states ``enc``
+        (B, T_enc, D).  Split out of :meth:`prefill` so a Pipeline can run
+        the encoder as its own graph node and fan its output edge into the
+        decoder prefill (the whisper encoder→decoder join)."""
         cfg = self.cfg
-        enc = self.encode(params, frames)
         x = self._embed_dec(params, tokens)
         b, s, _ = x.shape
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))

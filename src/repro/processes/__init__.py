@@ -4,6 +4,12 @@ from .fft import FFT
 from .complex_elementprod import ComplexElementProd
 from .coil_combine import RSSCombine, XImageSum
 from .simple_mri_recon import SimpleMRIRecon
+from .lm import (CacheSplice, DecodeSession, DecodeStep, PrefillProcess,
+                 SlotRelease, TreeCodec, WhisperEncode, WhisperPrefill,
+                 decode_state_data, weights_data)
 
-__all__ = ["ComplexElementProd", "FFT", "Negate", "RSSCombine",
-           "SimpleMRIRecon", "XImageSum"]
+__all__ = ["CacheSplice", "ComplexElementProd", "DecodeSession",
+           "DecodeStep", "FFT", "Negate", "PrefillProcess", "RSSCombine",
+           "SimpleMRIRecon", "SlotRelease", "TreeCodec", "WhisperEncode",
+           "WhisperPrefill", "XImageSum", "decode_state_data",
+           "weights_data"]

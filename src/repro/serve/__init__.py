@@ -1,5 +1,5 @@
 from .engine import ServeEngine, SamplingConfig, make_decode_fn, make_prefill_fn
-from .pipeline import PipelineServer, ServeResponse
+from .pipeline import LMServer, PipelineServer, ServeResponse
 
-__all__ = ["PipelineServer", "SamplingConfig", "ServeEngine",
+__all__ = ["LMServer", "PipelineServer", "SamplingConfig", "ServeEngine",
            "ServeResponse", "make_decode_fn", "make_prefill_fn"]

@@ -1,15 +1,31 @@
-"""Serving engine: batched prefill + decode with continuous batching.
+"""Legacy serving entry point — now a thin wrapper over the Pipeline stack.
 
-Slots model vLLM-style continuous batching at fixed batch width: each of
-the B cache rows is a slot; finished requests release their slot, queued
-requests claim it (their prompt is prefilled into just that row via a
-single-row prefill + cache splice).  The decode step itself is a paper-style
-Process: compiled once in ``init`` (per shape), launched per token.
+The slot-based continuous-batching loop that used to live here (host-side
+cache pytree, per-step ``jax.jit`` calls, a private splice/admit/decode
+loop) was folded into :class:`repro.serve.pipeline.LMServer`, which runs
+the SAME semantics through the declarative graph machinery: the KV cache
+is one persistent arena-backed :class:`~repro.core.data.Data` (device-
+resident, donated step-to-step), prefill/decode/splice/release are typed-
+port Processes (:mod:`repro.processes.lm`), and admission joins in-flight
+decode batches when a slot frees.  There is exactly ONE batching
+implementation; :class:`ServeEngine` only adapts the historical
+constructor signature to it.
+
+What remains here:
+
+* :class:`SamplingConfig` — the sampling/stop-condition dataclass (shared
+  by both layers).
+* :func:`sample_tokens` and the ``make_prefill_fn``/``make_decode_fn``
+  helpers — standalone utilities for callers that drive a model's serve
+  contract directly (training-side eval loops, notebooks).
+* :class:`ServeEngine` — the compatibility wrapper.  Greedy decoding only
+  (``temperature=0``): sampling now runs on device inside the compiled
+  decode step, and the stochastic path was never wired into it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -51,90 +67,58 @@ def make_decode_fn(model) -> Callable:
 
 
 class ServeEngine:
-    """Fixed-width continuous batching over a model's cache."""
+    """Compatibility wrapper: the legacy fixed-width continuous-batching
+    API, served by :class:`repro.serve.pipeline.LMServer`.
+
+    ``sampling`` defaults to a FRESH :class:`SamplingConfig` per engine
+    (``None`` sentinel — a mutable dataclass default would be shared by
+    every engine in the process)."""
 
     def __init__(self, model, params, batch: int, max_len: int,
-                 sampling: SamplingConfig = SamplingConfig(), mesh=None):
+                 sampling: Optional[SamplingConfig] = None, mesh=None,
+                 app=None, enc_len: Optional[int] = None):
+        from repro.serve.pipeline import LMServer
+
+        self.sampling = sampling if sampling is not None else SamplingConfig()
         self.model, self.params = model, params
         self.batch, self.max_len = batch, max_len
-        self.sampling = sampling
         self.mesh = mesh
-        self.cache = model.init_cache(batch, max_len)
-        self.active = np.zeros(batch, dtype=bool)
-        self.positions = np.zeros(batch, dtype=np.int32)
-        self.req_of_slot = np.full(batch, -1, dtype=np.int64)
-        self.results: List[List[int]] = []        # one list per request
-        self.queue: List[tuple] = []              # (request_id, prompt)
-        self._decode = jax.jit(make_decode_fn(model))
-        self._prefill = jax.jit(make_prefill_fn(model))
-        self._last_tok = np.zeros((batch, 1), dtype=np.int32)
-        self._rng = jax.random.key(0)
+        self._server = LMServer(model, params, batch=batch, max_len=max_len,
+                                sampling=self.sampling, enc_len=enc_len,
+                                app=app)
 
-    # -- request lifecycle ----------------------------------------------------
-    def submit(self, prompt: Sequence[int]) -> int:
-        rid = len(self.results)
-        self.results.append([])
-        self.queue.append((rid, list(prompt)))
-        return rid
+    # -- request lifecycle (delegated) ----------------------------------------
+    def submit(self, prompt: Sequence[int], frames=None) -> int:
+        return self._server.submit(prompt, frames)
 
-    def _admit(self) -> None:
-        """Claim free slots for queued prompts (single-row prefill)."""
-        for slot in np.where(~self.active)[0]:
-            if not self.queue:
-                break
-            rid, prompt = self.queue.pop(0)
-            row_cache = self.model.init_cache(1, self.max_len)
-            toks = jnp.asarray(prompt, jnp.int32)[None, :]
-            logits, row_cache = self._prefill(self.params, toks, row_cache)
-            tok = np.asarray(sample_tokens(logits, self.sampling, self._next_rng()))
-            self.cache = jax.tree.map(
-                lambda full, row: self._splice(full, row, int(slot)),
-                self.cache, row_cache)
-            self.active[slot] = True
-            self.positions[slot] = len(prompt)
-            self.req_of_slot[slot] = rid
-            self.results[rid] = [int(tok[0, 0])]
-            self._last_tok[slot] = tok[0]
-
-    @staticmethod
-    def _splice(full, row, slot: int):
-        """Insert a 1-row cache into slot `slot` of the batched cache.  The
-        batch axis is the first axis whose size matches; caches are built so
-        that is axis 1 for stacked-layer leaves, axis 0 otherwise."""
-        if row.ndim >= 2 and full.shape[1:] == row.shape[1:] and full.shape[0] != row.shape[0]:
-            # leaf without layer stacking: batch on axis 0
-            return jax.lax.dynamic_update_slice_in_dim(full, row, slot, axis=0)
-        return jax.lax.dynamic_update_slice_in_dim(full, row, slot, axis=1)
-
-    def _next_rng(self):
-        self._rng, sub = jax.random.split(self._rng)
-        return sub
-
-    # -- decode ----------------------------------------------------------------
     def step(self) -> None:
-        """One decode step for every active slot."""
-        self._admit()
-        if not self.active.any():
-            return
-        pos = jnp.asarray(int(self.positions.max()), jnp.int32)
-        # per-slot positions differ; the unified kpos cache masks stale slots,
-        # so we decode at each slot's own position via the max + per-slot mask.
-        tok = jnp.asarray(self._last_tok)
-        logits, self.cache = self._decode(self.params, tok, pos, self.cache)
-        new = np.asarray(sample_tokens(logits, self.sampling, self._next_rng()))
-        for slot in np.where(self.active)[0]:
-            t = int(new[slot, 0])
-            rid = int(self.req_of_slot[slot])
-            self.results[rid].append(t)
-            self.positions[slot] += 1
-            self._last_tok[slot] = new[slot]
-            done = (self.sampling.eos_id is not None and t == self.sampling.eos_id)
-            if done or len(self.results[rid]) >= self.sampling.max_new_tokens:
-                self.active[slot] = False
+        self._server.step()
 
     def run(self, max_steps: int = 10_000) -> List[List[int]]:
-        steps = 0
-        while (self.queue or self.active.any()) and steps < max_steps:
-            self.step()
-            steps += 1
-        return self.results
+        return self._server.run(max_steps)
+
+    # -- introspection (the legacy attributes, read-through) ------------------
+    @property
+    def results(self) -> List[List[int]]:
+        return self._server.results
+
+    @property
+    def queue(self) -> List[tuple]:
+        return self._server.queue
+
+    @property
+    def active(self) -> np.ndarray:
+        return self._server.active
+
+    @property
+    def positions(self) -> np.ndarray:
+        return self._server.positions
+
+    @property
+    def req_of_slot(self) -> np.ndarray:
+        return self._server.req_of_slot
+
+    @property
+    def server(self):
+        """The underlying :class:`repro.serve.pipeline.LMServer`."""
+        return self._server

@@ -53,12 +53,15 @@ import dataclasses
 import threading
 import time
 from collections import deque
-from typing import Any, Deque, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 
+from repro.core.app import CLapp
 from repro.core.data import Data
-from repro.core.process import PortError
+from repro.core.graph import Pipeline
+from repro.core.process import PortError, ProfileParameters
 from repro.core.stream import (StreamQueue, _BatchPlan, _JoinFeed,
                                _edge_blobs)
 from repro.core.sync import Coherence
@@ -411,3 +414,201 @@ class PipelineServer:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class LMServer:
+    """Slot-based continuous batching for autoregressive decode, built
+    entirely from Pipeline-stack primitives (the ONE batching
+    implementation; ``repro.serve.engine.ServeEngine`` is now a thin
+    compatibility wrapper over this class).
+
+    Each of the ``batch`` rows of one persistent, arena-backed decode
+    state (:func:`repro.processes.lm.decode_state_data` — sampling
+    bookkeeping + every KV/recurrent cache leaf) is a **slot**:
+
+    * **admission** — a queued prompt claims a free slot: a per-prompt-
+      shape prefill :class:`~repro.core.graph.Pipeline` produces a batch-1
+      row state on device, and an in-place :class:`~repro.processes.lm.
+      CacheSplice` donates the old batched state and writes the row into
+      the slot.  New requests join IN-FLIGHT decode batches the moment a
+      slot frees — no full-batch-or-timeout wait.
+    * **decode** — one in-place :class:`~repro.processes.lm.DecodeStep`
+      launch per token advances every active slot; the state blob is
+      donated step-to-step and stays ``DEVICE_RESIDENT``, so the only
+      per-step traffic is the (B, 1) token readback (``decode_profile``
+      records zero ``"transfer"`` time on the cache edge — the PR-6
+      phase breakdown proves it).
+    * **release** — a finished request retires its slot with an in-place
+      :class:`~repro.processes.lm.SlotRelease` (device ``active`` flag
+      zeroed; position/token freeze exactly like the legacy host-side
+      bookkeeping, keeping ``pos = positions.max()`` bit-compatible).
+
+    Decoding is greedy (``temperature=0``) — the sampling math runs on
+    device inside the compiled step, so the host loop never sees logits.
+    Stochastic sampling is rejected at construction rather than silently
+    approximated.  Encoder-decoder models (whisper) pass per-request
+    ``frames`` to :meth:`submit`; their prefill graph is the encoder→
+    decoder fan-in join.
+    """
+
+    def __init__(self, model, params, *, batch: int, max_len: int,
+                 sampling=None, enc_len: Optional[int] = None,
+                 app: Optional[CLapp] = None):
+        from repro.serve.engine import SamplingConfig  # lazy: engine wraps us
+        from repro.processes import lm as lmp
+
+        self.sampling = sampling if sampling is not None else SamplingConfig()
+        if self.sampling.temperature > 0 or self.sampling.top_k:
+            raise NotImplementedError(
+                "LMServer decodes greedily on device (the sampling runs "
+                "inside the compiled step); temperature/top_k sampling is "
+                "not wired into the device-resident path")
+        self.model, self.params = model, params
+        self.batch, self.max_len = batch, max_len
+        self.enc_len = enc_len
+        self.encdec = model.cfg.family == "encdec"
+        if self.encdec and enc_len is None:
+            raise ValueError("encoder-decoder models need enc_len")
+        self.app = app if app is not None else CLapp().init()
+        self._lmp = lmp
+        wdata, self._wcodec = lmp.weights_data(params)
+        self._weights_h = self.app.addData(wdata)       # uploaded once
+        self.state, self._ccodec = lmp.decode_state_data(
+            model, batch, max_len, enc_len)
+        self.state_h = self.app.addData(self.state, to_device=False)
+        self._decode_pipe = Pipeline(self.app) | lmp.DecodeStep(
+            self.app, model, self._wcodec, self._ccodec,
+            max_len=max_len).bind(
+                infile=self.state_h, outfile=self.state_h,
+                weights=self._weights_h)
+        self._decode_pipe.build()        # AOT at construction
+        self._prefill_pipes: Dict[Any, Pipeline] = {}   # prompt-shape keyed
+        self._splice: Dict[int, Any] = {}
+        self._release: Dict[int, Any] = {}
+        # host mirrors — identical bookkeeping (and attribute names) to the
+        # legacy ServeEngine so callers and tests carry over unchanged
+        self.active = np.zeros(batch, dtype=bool)
+        self.positions = np.zeros(batch, dtype=np.int32)
+        self.req_of_slot = np.full(batch, -1, dtype=np.int64)
+        self.results: List[List[int]] = []
+        self.queue: List[tuple] = []
+        self.steps = 0
+        self.admitted = 0
+        #: admission-side phases: prompt upload ("transfer"), prefill/splice
+        #: compile + compute.  The one-time zero-state upload lands here.
+        self.prefill_profile = ProfileParameters(enable=True)
+        #: decode-side phases: per-step compute only — ``phase_total(
+        #: "transfer") == 0.0`` is the zero-host2device cache-edge proof.
+        self.decode_profile = ProfileParameters(enable=True)
+
+    # -- request lifecycle ----------------------------------------------------
+    def submit(self, prompt: Sequence[int],
+               frames: Optional[np.ndarray] = None) -> int:
+        """Queue one request.  ``frames`` (T_enc, D) or (1, T_enc, D) is
+        required for encoder-decoder models, rejected otherwise."""
+        if self.encdec and frames is None:
+            raise ValueError(
+                "encoder-decoder models take per-request frames")
+        if not self.encdec and frames is not None:
+            raise ValueError(f"{self.model.cfg.family!r} models take no "
+                             "frames")
+        if frames is not None:
+            frames = np.asarray(frames, np.float32)
+            if frames.ndim == 2:
+                frames = frames[None]
+        rid = len(self.results)
+        self.results.append([])
+        self.queue.append((rid, list(prompt), frames))
+        return rid
+
+    def _prefill_pipe(self, key: Any) -> Pipeline:
+        pipe = self._prefill_pipes.get(key)
+        if pipe is None:
+            proc = self._lmp.PrefillProcess(
+                self.app, self.model, self._wcodec, self._ccodec,
+                max_len=self.max_len)
+            if self.encdec:
+                node = proc.bind(infile="tokens", frames="frames",
+                                 weights=self._weights_h)
+            else:
+                node = proc.bind(infile="tokens", weights=self._weights_h)
+            pipe = Pipeline(self.app) | node
+            self._prefill_pipes[key] = pipe
+        return pipe
+
+    def _admit(self) -> None:
+        """Claim free slots for queued prompts: single-row prefill through
+        the Pipeline, then an in-place splice into the slot."""
+        for slot in np.where(~self.active)[0]:
+            if not self.queue:
+                break
+            slot = int(slot)
+            rid, prompt, frames = self.queue.pop(0)
+            toks = Data({"tokens": np.asarray(prompt, np.int32)[None, :]})
+            if self.encdec:
+                key = (len(prompt), frames.shape)
+                inputs: Any = {"tokens": toks,
+                               "frames": Data({"frames": frames})}
+            else:
+                key = len(prompt)
+                inputs = toks
+            pipe = self._prefill_pipe(key)
+            row = pipe.run(inputs, sync=False,
+                           profile=self.prefill_profile)
+            tok = int(np.asarray(row.device_view("token"))[0, 0])
+            sp = self._splice.get(slot)
+            if sp is None:
+                sp = self._lmp.CacheSplice(self.app, slot)
+                sp.in_handles["in"] = self.state_h
+                sp.out_handle = self.state_h
+                sp.graph_name = f"CacheSplice[slot={slot}]"
+                self._splice[slot] = sp
+            # the row aux is read live at launch: re-point it at THIS
+            # prompt-shape pipe's output (all row states share one layout,
+            # so the compiled splice executable is reused as-is)
+            sp.aux_handles["row"] = pipe._built.output_handle
+            sp.launch(self.prefill_profile)
+            self.active[slot] = True
+            self.positions[slot] = len(prompt)
+            self.req_of_slot[slot] = rid
+            self.results[rid] = [tok]
+            self.admitted += 1
+
+    def _release_slot(self, slot: int) -> None:
+        rl = self._release.get(slot)
+        if rl is None:
+            rl = self._lmp.SlotRelease(self.app, slot)
+            rl.in_handles["in"] = self.state_h
+            rl.out_handle = self.state_h
+            rl.graph_name = f"SlotRelease[slot={slot}]"
+            self._release[slot] = rl
+        rl.launch(self.decode_profile)
+
+    # -- decode ----------------------------------------------------------------
+    def step(self) -> None:
+        """Admit whatever fits, then one batched decode step for every
+        active slot (a single in-place donated launch)."""
+        self._admit()
+        if not self.active.any():
+            return
+        self._decode_pipe.run(None, sync=False, profile=self.decode_profile)
+        self.steps += 1
+        new = np.asarray(self.state.device_view("token"))   # (B, 1) readback
+        for slot in np.where(self.active)[0]:
+            slot = int(slot)
+            t = int(new[slot, 0])
+            rid = int(self.req_of_slot[slot])
+            self.results[rid].append(t)
+            self.positions[slot] += 1
+            done = (self.sampling.eos_id is not None
+                    and t == self.sampling.eos_id)
+            if done or len(self.results[rid]) >= self.sampling.max_new_tokens:
+                self.active[slot] = False
+                self._release_slot(slot)
+
+    def run(self, max_steps: int = 10_000) -> List[List[int]]:
+        steps = 0
+        while (self.queue or self.active.any()) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.results
