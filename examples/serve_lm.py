@@ -12,7 +12,10 @@ behind the legacy ``ServeEngine`` wrapper):
   plus an in-place cache splice, joining the in-flight decode batch;
 * whisper requests carry per-request audio frames, and their prefill graph
   is a real fan-in Pipeline: frames -> encoder ~ tokens -> decoder prefill
-  joined on a device-resident, donated ``enc`` edge.
+  joined on a device-resident, donated ``enc`` edge;
+* the :class:`repro.serve.FrontDoor` control plane fronts TWO decode
+  replicas with priority admission, least-outstanding routing, and a
+  Prometheus-style metrics surface (docs/serving.md).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -23,7 +26,7 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import build_model
-from repro.serve import LMServer, SamplingConfig
+from repro.serve import CallableReplica, FrontDoor, LMServer, SamplingConfig
 
 
 def serve_transformer() -> None:
@@ -76,9 +79,48 @@ def serve_whisper() -> None:
     assert all(len(o) == 8 for o in outputs)
 
 
+def serve_front_door() -> None:
+    """Two LMServer replicas behind the FrontDoor control plane."""
+    cfg = get_smoke("qwen3-14b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+
+    def make_replica(name: str) -> CallableReplica:
+        lm = LMServer(model, params, batch=2, max_len=32,
+                      sampling=SamplingConfig(max_new_tokens=8))
+
+        def decode(prompt):
+            rid = lm.submit(list(prompt))
+            return lm.run()[rid]
+
+        return CallableReplica(name, decode, max_batch=2)
+
+    fd = FrontDoor([make_replica("lm-0"), make_replica("lm-1")],
+                   capacity=16, overflow="shed",
+                   policy="least-outstanding")
+    rng = np.random.default_rng(2)
+    rids = [fd.submit(list(rng.integers(0, cfg.vocab, size=5)),
+                      priority="interactive" if i % 3 == 0 else "batch")
+            for i in range(6)]
+    outcomes = {o.rid: o for o in fd.drain(timeout=600.0)}
+    for rid in rids:
+        o = outcomes[rid]
+        assert o.status == "ok", o
+        print(f"[frontdoor] rid {rid} ({o.priority}) -> {o.replica}: "
+              f"{len(o.result)} tokens in {o.latency_s * 1e3:.0f}ms")
+    health = fd.health()
+    print(f"[frontdoor] health ok={health['ok']}, served "
+          + str({n: r['served'] for n, r in health['replicas'].items()}))
+    for line in fd.metrics.render().splitlines():
+        if line.startswith("frontdoor_requests_completed_total"):
+            print(f"[frontdoor] {line}")
+    fd.close()
+
+
 def main() -> None:
     serve_transformer()
     serve_whisper()
+    serve_front_door()
     print("all requests completed")
 
 

@@ -156,6 +156,38 @@ class CLapp:
     def device(self) -> jax.Device:
         return self.devices[0]
 
+    def split(self, n: int) -> List["CLapp"]:
+        """Partition the selected devices into ``n`` independent replica
+        apps — the backend pool of the serving control plane
+        (:class:`repro.serve.control.FrontDoor`): each returned app owns a
+        contiguous, disjoint device subset with its own mesh, data
+        registry, and :class:`~repro.launch.mesh.DeviceProfileRegistry`,
+        so replicas profile (and fail) in isolation.  Requires at least
+        one device per replica; extra devices go to the earlier replicas
+        (the same largest-first convention as the balanced batch split).
+        """
+        devices = self.devices            # raises if init() never ran
+        if n < 1:
+            raise ValueError(f"need n >= 1 replicas, got {n}")
+        if n > len(devices):
+            raise ValueError(
+                f"cannot split {len(devices)} device(s) into {n} replicas "
+                "(each replica needs at least one device)")
+        from repro.launch.mesh import DeviceProfileRegistry, make_data_mesh
+        base, extra = divmod(len(devices), n)
+        apps, start = [], 0
+        for i in range(n):
+            stop = start + base + (1 if i < extra else 0)
+            app = CLapp()
+            app._devices = list(devices[start:stop])
+            app._mesh = make_data_mesh(app._devices)
+            app._initialized = True
+            app.device_profiles = DeviceProfileRegistry(
+                ema=self.device_profiles.ema)
+            apps.append(app)
+            start = stop
+        return apps
+
     # ------------------------------------------------------------------ mesh
     def set_mesh(self, mesh: jax.sharding.Mesh) -> None:
         self._mesh = mesh

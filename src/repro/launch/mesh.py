@@ -176,6 +176,16 @@ class DeviceProfileRegistry:
         """True when EVERY given device has a measured rate."""
         return all(not self.profile(d).cold for d in devices)
 
+    def total_rate(self, devices: Sequence[jax.Device]) -> float:
+        """Aggregate measured capacity of ``devices`` in items/sec — the
+        sum of their rates, or ``nan`` until every one is warm (a partial
+        sum would understate the pool and mislead whoever balances load
+        on it, e.g. the serving control plane's ``"profile"`` router)."""
+        rates = self.rates(devices)
+        if any(r != r for r in rates):
+            return float("nan")
+        return float(sum(rates))
+
     def reset(self) -> None:
         with self._lock:
             self._profiles.clear()

@@ -1,5 +1,12 @@
+from .control import (AdmissionRejected, CallableReplica, FrontDoor, Metrics,
+                      Outcome, PipelineReplica, PriorityClass, Replica,
+                      Router)
 from .engine import ServeEngine, SamplingConfig, make_decode_fn, make_prefill_fn
-from .pipeline import LMServer, PipelineServer, ServeResponse
+from .pipeline import (LMServer, PipelineServer, PromptTooLongError,
+                       ServeResponse)
 
-__all__ = ["LMServer", "PipelineServer", "SamplingConfig", "ServeEngine",
-           "ServeResponse", "make_decode_fn", "make_prefill_fn"]
+__all__ = ["AdmissionRejected", "CallableReplica", "FrontDoor", "LMServer",
+           "Metrics", "Outcome", "PipelineReplica", "PipelineServer",
+           "PriorityClass", "PromptTooLongError", "Replica", "Router",
+           "SamplingConfig", "ServeEngine", "ServeResponse",
+           "make_decode_fn", "make_prefill_fn"]

@@ -67,6 +67,27 @@ from repro.core.stream import (StreamQueue, _BatchPlan, _JoinFeed,
 from repro.core.sync import Coherence
 
 
+class PromptTooLongError(ValueError):
+    """A prompt does not fit the server's compiled cache capacity.
+
+    :class:`LMServer`'s decode state is ONE arena-backed Data whose cache
+    leaves are compiled for ``max_len`` positions; a prompt of ``T``
+    tokens prefills positions ``0..T-1`` and every generated token needs
+    one more, so ``T`` must satisfy ``1 <= T <= max_len - 1``.  Raised by
+    :meth:`LMServer.submit` *before* the request is queued — previously
+    an over-long prompt surfaced as an opaque shape error deep inside the
+    prefill compile."""
+
+    def __init__(self, prompt_len: int, max_len: int):
+        super().__init__(
+            f"prompt of {prompt_len} token(s) does not fit the compiled "
+            f"cache capacity max_len={max_len}: need 1 <= len(prompt) <= "
+            f"{max_len - 1} (prefill fills len(prompt) positions and each "
+            "generated token needs one more)")
+        self.prompt_len = prompt_len
+        self.max_len = max_len
+
+
 @dataclasses.dataclass
 class ServeResponse:
     """One served result: the output Data plus latency accounting."""
@@ -143,6 +164,7 @@ class PipelineServer:
         self._busy = False          # worker is launching a group
         self._force_flush = False
         self._stop_flag = False
+        self._closed = False        # close() ran (flush_timeout mode only)
         self._worker_error: Optional[BaseException] = None
 
     # ------------------------------------------------------------ lifecycle
@@ -211,6 +233,7 @@ class PipelineServer:
         self._ensure_built(request)
         blobs = self._pack_request(request)
         with self._cv:
+            self._check_closed()
             self._check_worker_error()
             rid = self._next_rid
             self._next_rid += 1
@@ -223,6 +246,16 @@ class PipelineServer:
                     self._worker.start()
                 self._cv.notify_all()
         return rid
+
+    def _check_closed(self) -> None:
+        """(Caller holds the lock.)  A closed server can neither admit
+        nor serve: raising beats silently restarting the background
+        thread (submit) or sleeping forever on responses that can no
+        longer arrive (drain/collect)."""
+        if self._closed:
+            raise RuntimeError(
+                "server is closed (close() was called); create a new "
+                "server via pipe.serve()")
 
     def _check_worker_error(self) -> None:
         """(Caller holds the lock.)  A launch/compile failure in the
@@ -256,7 +289,12 @@ class PipelineServer:
 
         With the background drain thread active this instead forces an
         immediate flush of any partial batch, waits for the thread to go
-        idle, and returns everything completed but not yet collected."""
+        idle, and returns everything completed but not yet collected.
+        On a closed server this raises ``RuntimeError`` — after
+        ``close()`` there is no thread left to flush, and waiting on the
+        queue would hang forever."""
+        with self._cv:
+            self._check_closed()
         if self._worker is not None:
             with self._cv:
                 self._force_flush = True
@@ -382,6 +420,7 @@ class PipelineServer:
                 "(flush_timeout=...); without it use drain()")
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._cv:
+            self._check_closed()
             while n is not None and len(self._completed) < n:
                 # a dead worker can never produce the missing responses —
                 # raise instead of sleeping out the timeout.  Responses
@@ -398,16 +437,26 @@ class PipelineServer:
 
     def close(self) -> None:
         """Stop the background drain thread (flushing anything pending
-        first).  Unclosed servers die with the process (daemon thread);
-        no-op without the background thread."""
-        if self._worker is None:
+        first) and mark the server closed: later ``submit``/``drain``/
+        ``collect`` calls raise ``RuntimeError`` instead of hanging on a
+        queue nothing serves any more.  Idempotent and thread-safe — the
+        worker is claimed under the lock, so two concurrent (or
+        sequential) ``close()`` calls can never both ``join()`` it, and
+        closing after a background launch failure (the thread already
+        dead) just reaps it without re-raising.  Unclosed servers die
+        with the process (daemon thread); servers without the background
+        thread (no ``flush_timeout``) have nothing to close and stay
+        usable."""
+        if self.flush_timeout is None:
             return
         with self._cv:
+            self._closed = True
+            worker, self._worker = self._worker, None
+            if worker is None:
+                return              # second close(), or never started
             self._stop_flag = True
             self._cv.notify_all()
-        self._worker.join()
-        self._worker = None
-        self._stop_flag = False
+        worker.join()
 
     def __enter__(self) -> "PipelineServer":
         return self
@@ -505,7 +554,16 @@ class LMServer:
     def submit(self, prompt: Sequence[int],
                frames: Optional[np.ndarray] = None) -> int:
         """Queue one request.  ``frames`` (T_enc, D) or (1, T_enc, D) is
-        required for encoder-decoder models, rejected otherwise."""
+        required for encoder-decoder models, rejected otherwise.
+
+        Validation is up-front and typed: a prompt that cannot fit the
+        compiled cache (``len(prompt) > max_len - 1``, or empty) raises
+        :class:`PromptTooLongError` here instead of failing later inside
+        the prefill shape checks, and encoder frames must match the
+        compiled ``enc_len``."""
+        prompt = list(prompt)
+        if not 1 <= len(prompt) <= self.max_len - 1:
+            raise PromptTooLongError(len(prompt), self.max_len)
         if self.encdec and frames is None:
             raise ValueError(
                 "encoder-decoder models take per-request frames")
@@ -516,6 +574,11 @@ class LMServer:
             frames = np.asarray(frames, np.float32)
             if frames.ndim == 2:
                 frames = frames[None]
+            if frames.shape[1] != self.enc_len:
+                raise ValueError(
+                    f"frames cover {frames.shape[1]} encoder positions "
+                    f"but the decode state was compiled for "
+                    f"enc_len={self.enc_len}")
         rid = len(self.results)
         self.results.append([])
         self.queue.append((rid, list(prompt), frames))
