@@ -34,6 +34,52 @@ def fmt_bytes(n):
     return f"{n:.1f}PB"
 
 
+def _fmt_t(s):
+    if s is None or s != s or s == float("inf"):
+        return "—"
+    return f"{s * 1e6:.1f}µs"
+
+
+def crossover_table(path=None):
+    """Render the per-(kernel, layout) backend-calibration records from
+    ``BENCH_pallas_fusion.json`` (the measured crossover points behind
+    ``use_pallas="auto"``; see docs/kernels.md)."""
+    import os
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_pallas_fusion.json")
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except (FileNotFoundError, ValueError):
+        print("\n### §Backend crossover: PENDING "
+              "(run `python -m benchmarks.pallas_fusion`)\n")
+        return
+    print("\n### §Backend crossover (use_pallas=\"auto\" calibration, "
+          f"device={bench.get('device', '?')})\n")
+    print("| kernel | layout | chosen | t_pallas | t_xla | roofline bound "
+          "| interpreted |")
+    print("|--------|--------|--------|----------|-------|----------------"
+          "|-------------|")
+    for r in bench.get("crossover", []):
+        import ast
+        try:
+            args = ast.literal_eval(r["layout"])[0]
+            shapes = "·".join("x".join(map(str, a[1]))
+                              for a in args if a[0] == "arr")
+        except (ValueError, SyntaxError):
+            shapes = r["layout"][:40]
+        print(f"| {r['kernel']} | {shapes} | **{r['backend']}** "
+              f"| {_fmt_t(r.get('t_pallas_s'))} | {_fmt_t(r.get('t_xla_s'))} "
+              f"| {r.get('bound', '—')} | {'yes' if r.get('interpreted') else 'no'} |")
+    for r in bench.get("layouts", []):
+        print(f"| mriFusedRecon (end-to-end) "
+              f"| {'x'.join(map(str, r['shape']))} "
+              f"| **{r.get('auto_resolved_backend', '?')}** "
+              f"| {_fmt_t(r.get('t_fused_s'))} | {_fmt_t(r.get('t_staged_s'))}"
+              f" (staged) | — | no |")
+
+
 def main():
     single = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.jsonl")
     multi = load(sys.argv[2] if len(sys.argv) > 2 else "results/dryrun_multi.jsonl")
@@ -81,6 +127,8 @@ def main():
               f"| {t_coll*1e3:.1f}ms | **{bound}** "
               f"| {f['useful_flops_ratio']*100:.0f}% "
               f"| {mfu*100:.2f}% |")
+
+    crossover_table()
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm lm_decode stream mesh serve fanin]
+    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm lm_decode stream mesh serve fanin pallas]
 """
 from __future__ import annotations
 
@@ -12,7 +12,7 @@ import sys
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "fig2", "overhead", "roofline",
                                   "lm", "lm_decode", "stream", "mesh",
-                                  "serve", "fanin"}
+                                  "serve", "fanin", "pallas"}
     print("name,us_per_call,derived")
     rows = []
     if "table1" in which:
@@ -45,6 +45,9 @@ def main() -> None:
     if "fanin" in which:
         from benchmarks.fanin_throughput import rows as fanin_rows
         rows += fanin_rows()
+    if "pallas" in which:
+        from benchmarks.pallas_fusion import rows as pallas_rows
+        rows += pallas_rows()
     for r in rows:
         print(r)
 

@@ -79,14 +79,29 @@ def rows() -> List[str]:
         jax.block_until_ready([o.device_blob for o in outs])
         return outs
 
+    # -- streamed, fused single-program MRI chain (PR 9) ---------------------
+    h_fin = app.addData(_datasets(1)[0])
+    h_fout = app.addData(XData({"xdata": np.zeros(d_in.x_shape(),
+                                                  np.complex64)}))
+    fused = SimpleMRIRecon(app, mode="fused_pallas")
+    fused.in_handle, fused.out_handle = h_fin, h_fout
+    fused.init()
+
+    def run_fused():
+        outs = fused.stream(datasets, batch=BATCH)
+        jax.block_until_ready([o.device_blob for o in outs])
+        return outs
+
     seq = run_sequential()          # warmup (buffers + any lazy compiles)
     outs = run_streamed()           # warmup (batched compile)
+    fused_outs = run_fused()        # warmup (fused batched compile)
     # interleave the A/B measurements so machine-load drift hits both arms
     # equally; min-of-REPS filters scheduler noise on this shared host
-    t_seq = t_stream = float("inf")
+    t_seq = t_stream = t_fused = float("inf")
     for _ in range(REPS):
         t_seq = min(t_seq, _timed(run_sequential))
         t_stream = min(t_stream, _timed(run_streamed))
+        t_fused = min(t_fused, _timed(run_fused))
 
     out_layout = outs[0].layout
     bitwise = all(
@@ -94,13 +109,23 @@ def rows() -> List[str]:
                        unpack_host(np.asarray(s), out_layout)["xdata"])
         for o, s in zip(outs, seq))
     speedup = t_seq / max(t_stream, 1e-12)
+    fused_speedup = t_stream / max(t_fused, 1e-12)
+    fused_close = all(
+        np.allclose(np.asarray(fo.device_view("xdata")),
+                    np.asarray(o.device_view("xdata")),
+                    rtol=1e-4, atol=1e-4)
+        for fo, o in zip(fused_outs, outs))
 
     us_seq = t_seq / N_DATASETS * 1e6
     us_stream = t_stream / N_DATASETS * 1e6
+    us_fused = t_fused / N_DATASETS * 1e6
     out_rows = [
         f"stream_sequential_per_set,{us_seq:.1f},n={N_DATASETS}",
         f"stream_batched_per_set,{us_stream:.1f},"
         f"batch={BATCH};speedup={speedup:.2f};bit_identical={int(bitwise)}",
+        f"stream_fused_chain_per_set,{us_fused:.1f},"
+        f"batch={BATCH};vs_staged_stream={fused_speedup:.2f};"
+        f"allclose_1e-4={int(fused_close)}",
     ]
     bench = {
         "name": "stream_throughput",
@@ -108,6 +133,9 @@ def rows() -> List[str]:
         "shape": [FRAMES, COILS, H, W],
         "sequential_s": round(t_seq, 4), "streamed_s": round(t_stream, 4),
         "speedup": round(speedup, 3), "bit_identical": bitwise,
+        "fused_chain_s": round(t_fused, 4),
+        "fused_vs_staged_stream": round(fused_speedup, 3),
+        "fused_allclose_1e-4": fused_close,
     }
     print("BENCH " + json.dumps(bench))
     out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),

@@ -5,9 +5,11 @@ Both reduce over the coil axis of an (F, C, H, W) stack:
 * ``ximage_sum``: complex sum over coils (final step of eq. 1)
 * ``rss``: root-sum-of-squares magnitude combination (the Table I/II op)
 
-Tiling: grid (frames, row-tiles); each step reduces the full coil axis for a
-(C, bh, W) VMEM tile — C*bh*W floats must fit VMEM, which holds for any
-realistic coil count (8..64) and is asserted in the wrapper.
+Tiling: grid (frames, row-tiles, col-tiles); each step reduces the full coil
+axis for a (C, bh, bw) VMEM tile.  The fast path keeps bw == W (one grid
+step per row band); when a single row doesn't fit the budget (huge W at
+high coil count) the planner falls back to lane-aligned column tiles
+instead of overflowing VMEM — see ``common.vmem_tile_plan``.
 """
 from __future__ import annotations
 
@@ -19,7 +21,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.registry import kernel
 from . import ref
-from .common import interpret_mode, merge_complex, pad_dim, round_up, split_complex
+from .common import (interpret_mode, merge_complex, pad_dim, round_up,
+                     split_complex, vmem_tile_plan)
 
 VMEM_BUDGET = 8 * 1024 * 1024  # conservative half of a v5e core's 16 MiB
 
@@ -35,13 +38,6 @@ def _rss_kernel(re_ref, im_ref, o_ref):
     o_ref[...] = jnp.sqrt(jnp.sum(re * re + im * im, axis=1))
 
 
-def _tile_rows(f: int, c: int, h: int, w: int) -> int:
-    """Pick bh so the (C, bh, W) f32 in-tile (x2 for re+im) fits VMEM."""
-    per_row = 2 * c * w * 4
-    bh = max(1, min(h, VMEM_BUDGET // max(per_row, 1)))
-    return bh
-
-
 def _combine(x: jax.Array, kern, n_out, out_complex: bool):
     if x.ndim < 3:
         raise ValueError("need (..., C, H, W)")
@@ -52,13 +48,14 @@ def _combine(x: jax.Array, kern, n_out, out_complex: bool):
         f *= s
     xr = x.reshape(f, c, h, w)
     re, im = split_complex(xr)
-    bh = _tile_rows(f, c, h, w)
-    hp = round_up(h, bh)
-    re, im = pad_dim(re, 2, hp), pad_dim(im, 2, hp)
-    grid = (f, hp // bh)
-    in_spec = pl.BlockSpec((1, c, bh, w), lambda fi, hi: (fi, 0, hi, 0))
-    out_spec = pl.BlockSpec((1, bh, w), lambda fi, hi: (fi, hi, 0))
-    out_shape = [jax.ShapeDtypeStruct((f, hp, w), jnp.float32)] * n_out
+    bh, bw = vmem_tile_plan(c, h, w, budget=VMEM_BUDGET, arrays=2)
+    hp, wp = round_up(h, bh), round_up(w, bw)
+    re = pad_dim(pad_dim(re, 2, hp), 3, wp)
+    im = pad_dim(pad_dim(im, 2, hp), 3, wp)
+    grid = (f, hp // bh, wp // bw)
+    in_spec = pl.BlockSpec((1, c, bh, bw), lambda fi, hi, wi: (fi, 0, hi, wi))
+    out_spec = pl.BlockSpec((1, bh, bw), lambda fi, hi, wi: (fi, hi, wi))
+    out_shape = [jax.ShapeDtypeStruct((f, hp, wp), jnp.float32)] * n_out
     outs = pl.pallas_call(
         kern,
         grid=grid,
@@ -67,7 +64,7 @@ def _combine(x: jax.Array, kern, n_out, out_complex: bool):
         out_shape=out_shape,
         interpret=interpret_mode(),
     )(re, im)
-    outs = [o[:, :h, :] for o in (outs if isinstance(outs, (list, tuple)) else [outs])]
+    outs = [o[:, :h, :w] for o in (outs if isinstance(outs, (list, tuple)) else [outs])]
     if out_complex:
         res = merge_complex(outs[0], outs[1])
         res = res.astype(x.dtype) if jnp.iscomplexobj(x) else outs[0].astype(x.dtype)

@@ -7,6 +7,7 @@ in Python with the same blocking/grid semantics.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Tuple
 
 import jax
@@ -24,8 +25,38 @@ SUBLANE = 8
 
 
 def interpret_mode() -> bool:
-    """Pallas must interpret on non-TPU backends; real lowering on TPU."""
+    """Pallas must interpret on non-TPU backends; real lowering on TPU.
+
+    Auto-enabling interpret mode off-TPU is what lets ``use_pallas="auto"``
+    resolve to the Pallas backend without hard-failing in a CPU container.
+    ``REPRO_PALLAS_INTERPRET=0/1`` overrides the autodetection either way
+    (``1`` forces interpret even on TPU — useful for debugging kernel
+    bodies; ``0`` forces real lowering — only valid on TPU).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    if env != "":
+        return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
+
+
+def vmem_tile_plan(c: int, h: int, w: int, *, budget: int,
+                   arrays: int = 2) -> Tuple[int, int]:
+    """Pick a ``(bh, bw)`` tile so ``arrays`` (C, bh, bw) f32 blocks fit in
+    ``budget`` bytes of VMEM.
+
+    Prefers full-width row tiles (``bw == w``, the fast path: one grid step
+    per row band).  When a single row doesn't fit — ``arrays * C * W * 4 >
+    budget``, e.g. C=64 with a very wide W — falls back to a W-tiled grid
+    with lane-aligned column blocks instead of silently overflowing VMEM.
+    """
+    per_row = arrays * c * w * 4
+    if per_row <= budget:
+        bh = max(1, min(h, budget // per_row))
+        return bh, w
+    bw = budget // (arrays * c * 4)
+    if bw >= LANE:
+        bw = bw // LANE * LANE  # keep column tiles lane-aligned
+    return 1, max(1, min(w, bw))
 
 
 def round_up(n: int, m: int) -> int:

@@ -35,6 +35,25 @@ def rss(x: jax.Array, axis: int = -3) -> jax.Array:
     return jnp.sqrt(jnp.sum(mag2, axis=axis))
 
 
+def mri_fused_epilogue(x: jax.Array, smaps: jax.Array,
+                       combine: str = "sum") -> jax.Array:
+    """Post-IFFT MRI epilogue as one program: multiply the per-coil
+    x-images by conj(smaps) and reduce the coil axis (paper §IV-A steps
+    1+2 / §IV-B).  ``combine``: "sum" (eq. 1) or "rss" (Table I/II)."""
+    prod = complex_elementprod(x, smaps, conjugate_b=True)
+    if combine == "rss":
+        return rss(prod)
+    return ximage_sum(prod)
+
+
+def mri_fused_recon(k: jax.Array, smaps: jax.Array, combine: str = "sum",
+                    norm: str = "ortho") -> jax.Array:
+    """Whole SimpleMRIRecon chain as one program:
+    IFFT2 -> conj(smaps) product -> coil combine."""
+    x = jnp.fft.ifft2(k, norm=norm)
+    return mri_fused_epilogue(x, smaps, combine)
+
+
 def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
     """RMS layer norm over the last axis (LM hot path)."""
     dtype = x.dtype

@@ -213,3 +213,234 @@ def model_flops(cfg, params_tree, kind: str, batch: int, seq: int) -> float:
     if kind == "prefill":
         return 2.0 * active * batch * seq
     return 2.0 * active * batch  # decode: one token per row
+
+
+# ---------------------------------------------------------------------------
+# KernelChooser: roofline + one-shot timed calibration -> pallas-vs-XLA
+# ---------------------------------------------------------------------------
+
+#: relative gap below which the measured times are considered a tie and the
+#: roofline bound breaks it (memory-bound -> the fused Pallas pass, which
+#: exists to cut HBM traffic; compute-bound -> XLA, whose op fusion and
+#: layout assignment win on arithmetic-heavy bodies).
+CALIBRATION_TIE_BAND = 0.10
+
+_CALIB_TAG = "__kernel_calibration__"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCalibration:
+    """One (kernel, layout, device) calibration verdict.
+
+    ``t_pallas_s`` / ``t_xla_s`` are min-of-reps wall-clock of the
+    AOT-compiled backends (``inf`` for a backend that was not timed).
+    ``interpreted`` marks Pallas interpret-mode timings, which are NOT
+    comparable to compiled XLA — when set, the verdict is forced to
+    ``"xla"`` unless timing was explicitly forced for reporting.
+    """
+    kernel: str
+    layout: Any
+    device: str
+    backend: str                   # "pallas" | "xla"
+    t_pallas_s: float
+    t_xla_s: float
+    t_compute_est_s: float         # roofline terms from the XLA compile
+    t_memory_est_s: float
+    bound: str                     # "compute" | "memory"
+    interpreted: bool
+    reason: str
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.backend == "pallas"
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["layout"] = repr(self.layout)
+        return d
+
+
+def _calibration_cache() -> Dict[Any, Any]:
+    # the per-process compile cache doubles as the calibration store:
+    # verdicts live next to the executables they describe and are dropped
+    # together on cache clears (deferred import: core.process imports are
+    # heavy and must not cycle through launch at module import time)
+    from repro.core.process import _COMPILE_CACHE
+    return _COMPILE_CACHE
+
+
+def _device_key(device=None) -> str:
+    import jax
+    d = device or jax.devices()[0]
+    return f"{d.platform}:{getattr(d, 'device_kind', '')}:{d.id}"
+
+
+def _layout_key(args, kwargs) -> Any:
+    def enc(a):
+        if hasattr(a, "shape") and hasattr(a, "dtype"):
+            return ("arr", tuple(a.shape), str(a.dtype))
+        return ("lit", repr(a))
+    return (tuple(enc(a) for a in args),
+            tuple(sorted((k, enc(v)) for k, v in kwargs.items())))
+
+
+class KernelChooser:
+    """Measured pallas-vs-XLA backend selection per (kernel, layout, device).
+
+    For a registered kernel (``repro.core.registry``) and a concrete input
+    layout, :meth:`calibrate` AOT-compiles BOTH backends (the Pallas entry
+    point and its pure-jnp oracle), reads the roofline estimate off the XLA
+    compile's ``cost_analysis``, runs a one-shot min-of-``reps`` timing of
+    each, and caches the verdict in the compile cache.  :meth:`use_pallas`
+    is the cheap cached query that ``use_pallas="auto"`` processes call at
+    trace time — it only needs shapes/dtypes, so tracers are fine.
+
+    Off-TPU the Pallas backend runs in interpret mode (Python-loop
+    semantics, orders of magnitude slower than its compiled self), so its
+    timing says nothing about TPU performance: ``use_pallas`` short-circuits
+    to XLA without timing anything, and benchmark harnesses that still want
+    both numbers pass ``force_timing=True`` (the record is then marked
+    ``interpreted`` and excluded from any speedup claim).
+    """
+
+    def __init__(self, reps: int = 3):
+        self.reps = reps
+
+    # -- cached query -------------------------------------------------------
+
+    def use_pallas(self, name: str, *args, **kwargs) -> bool:
+        from repro.kernels.common import interpret_mode
+        cached = self.lookup(name, *args, **kwargs)
+        if cached is not None:
+            return cached.use_pallas
+        if interpret_mode():
+            # don't run the timed calibration at all: interpret-mode Pallas
+            # always loses, and timing it inside a trace would be pure waste
+            rec = self._record_untimed(name, args, kwargs,
+                                       reason="pallas would run in interpret "
+                                              "mode on this backend")
+            return rec.use_pallas
+        return self.calibrate(name, *args, **kwargs).use_pallas
+
+    def lookup(self, name: str, *args, **kwargs) -> Optional[KernelCalibration]:
+        key = (_CALIB_TAG, name, _layout_key(args, kwargs), _device_key())
+        return _calibration_cache().get(key)
+
+    def records(self) -> List[KernelCalibration]:
+        return [v for k, v in _calibration_cache().items()
+                if isinstance(k, tuple) and k and k[0] == _CALIB_TAG]
+
+    # -- calibration --------------------------------------------------------
+
+    def calibrate(self, name: str, *args, force_timing: bool = False,
+                  **kwargs) -> KernelCalibration:
+        """AOT-compile both backends for this concrete layout, time them,
+        and cache the verdict.  ``args`` may be tracers or abstract values —
+        only shapes/dtypes are read; timing runs on zero-filled examples."""
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.registry import KernelRegistry
+        from repro.kernels.common import interpret_mode
+
+        cached = self.lookup(name, *args, **kwargs)
+        if cached is not None and not (force_timing and cached.t_pallas_s == float("inf")):
+            return cached
+
+        entry = KernelRegistry().entry(name)
+        if entry.ref is None:
+            raise KeyError(f"kernel {name!r} has no XLA oracle to choose from")
+        # arrays become zero-filled runtime inputs; everything else (flags,
+        # block sizes) stays a static Python literal inside the closure
+        is_arr = [hasattr(a, "shape") and hasattr(a, "dtype") for a in args]
+        ex = [jnp.zeros(a.shape, a.dtype)
+              for a, arr in zip(args, is_arr) if arr]
+
+        def staged(fn):
+            def g(*xs):
+                it = iter(xs)
+                full = [next(it) if arr else a
+                        for a, arr in zip(args, is_arr)]
+                return fn(*full, **kwargs)
+            return g
+
+        fn_c = jax.jit(staged(entry.fn)).lower(*ex).compile()
+        ref_c = jax.jit(staged(entry.ref)).lower(*ex).compile()
+
+        cd = cost_dict(ref_c)
+        t_compute = cd.get("flops", 0.0) / PEAK_FLOPS
+        t_memory = cd.get("bytes accessed", 0.0) / HBM_BW
+        bound = "memory" if t_memory >= t_compute else "compute"
+
+        def timed(compiled) -> float:
+            jax.block_until_ready(compiled(*ex))      # warmup
+            best = float("inf")
+            for _ in range(self.reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(compiled(*ex))
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+        interpreted = interpret_mode()
+        t_xla = timed(ref_c)
+        if interpreted and not force_timing:
+            return self._store(name, args, kwargs, KernelCalibration(
+                kernel=name, layout=_layout_key(args, kwargs),
+                device=_device_key(), backend="xla",
+                t_pallas_s=float("inf"), t_xla_s=t_xla,
+                t_compute_est_s=t_compute, t_memory_est_s=t_memory,
+                bound=bound, interpreted=True,
+                reason="pallas interpret-mode timing not comparable"))
+        t_pallas = timed(fn_c)
+
+        if interpreted:
+            backend, reason = "xla", ("interpret-mode pallas timing recorded "
+                                      "for reporting only")
+        elif abs(t_pallas - t_xla) <= CALIBRATION_TIE_BAND * max(t_pallas, t_xla):
+            backend = "pallas" if bound == "memory" else "xla"
+            reason = f"measured tie (<{CALIBRATION_TIE_BAND:.0%}); roofline {bound}-bound"
+        elif t_pallas < t_xla:
+            backend, reason = "pallas", f"measured {t_xla / t_pallas:.2f}x faster"
+        else:
+            backend, reason = "xla", f"measured {t_pallas / t_xla:.2f}x faster"
+
+        return self._store(name, args, kwargs, KernelCalibration(
+            kernel=name, layout=_layout_key(args, kwargs),
+            device=_device_key(), backend=backend,
+            t_pallas_s=t_pallas, t_xla_s=t_xla,
+            t_compute_est_s=t_compute, t_memory_est_s=t_memory,
+            bound=bound, interpreted=interpreted, reason=reason))
+
+    def _record_untimed(self, name, args, kwargs, reason) -> KernelCalibration:
+        return self._store(name, args, kwargs, KernelCalibration(
+            kernel=name, layout=_layout_key(args, kwargs),
+            device=_device_key(), backend="xla",
+            t_pallas_s=float("inf"), t_xla_s=float("inf"),
+            t_compute_est_s=0.0, t_memory_est_s=0.0, bound="memory",
+            interpreted=True, reason=reason))
+
+    def _store(self, name, args, kwargs, rec: KernelCalibration) -> KernelCalibration:
+        key = (_CALIB_TAG, name, _layout_key(args, kwargs), _device_key())
+        _calibration_cache()[key] = rec
+        return rec
+
+
+_DEFAULT_CHOOSER: Optional[KernelChooser] = None
+
+
+def default_chooser() -> KernelChooser:
+    global _DEFAULT_CHOOSER
+    if _DEFAULT_CHOOSER is None:
+        _DEFAULT_CHOOSER = KernelChooser()
+    return _DEFAULT_CHOOSER
+
+
+def resolve_backend(use_pallas, name: str, *args, **kwargs) -> bool:
+    """The ``use_pallas="auto"`` contract: ``True``/``False`` are honored
+    verbatim; ``"auto"`` asks the default :class:`KernelChooser` (cached
+    per kernel/layout/device, safe to call at trace time)."""
+    if use_pallas == "auto":
+        return default_chooser().use_pallas(name, *args, **kwargs)
+    return bool(use_pallas)

@@ -3,13 +3,14 @@ from .negate import Negate
 from .fft import FFT
 from .complex_elementprod import ComplexElementProd
 from .coil_combine import RSSCombine, XImageSum
-from .simple_mri_recon import SimpleMRIRecon
+from .simple_mri_recon import FusedMRIRecon, FusedReconParams, SimpleMRIRecon
 from .lm import (CacheSplice, DecodeSession, DecodeStep, PrefillProcess,
                  SlotRelease, TreeCodec, WhisperEncode, WhisperPrefill,
                  decode_state_data, weights_data)
 
 __all__ = ["CacheSplice", "ComplexElementProd", "DecodeSession",
-           "DecodeStep", "FFT", "Negate", "PrefillProcess", "RSSCombine",
+           "DecodeStep", "FFT", "FusedMRIRecon", "FusedReconParams",
+           "Negate", "PrefillProcess", "RSSCombine",
            "SimpleMRIRecon", "SlotRelease", "TreeCodec", "WhisperEncode",
            "WhisperPrefill", "XImageSum", "decode_state_data",
            "weights_data"]

@@ -8,11 +8,13 @@ import jax.numpy as jnp
 
 from repro.core.process import Port, Process
 from repro.kernels import ref as kref
+from repro.launch.roofline import resolve_backend
 
 
 @dataclasses.dataclass(frozen=True)
 class CombineParams:
-    use_pallas: bool = False
+    #: True / False force a backend; "auto" asks the KernelChooser
+    use_pallas: bool | str = "auto"
 
 
 class XImageSum(Process):
@@ -27,7 +29,7 @@ class XImageSum(Process):
     def apply(self, views, aux, params):
         params = params or CombineParams()
         x = views["kdata"]
-        if params.use_pallas:
+        if resolve_backend(params.use_pallas, "xImageSum", x):
             out = self.getApp().kernels.get("xImageSum")(x)
         else:
             out = kref.ximage_sum(x)
@@ -46,7 +48,7 @@ class RSSCombine(Process):
     def apply(self, views, aux, params):
         params = params or CombineParams()
         x = views["kdata"]
-        if params.use_pallas:
+        if resolve_backend(params.use_pallas, "rss", x):
             out = self.getApp().kernels.get("rss")(x)
         else:
             out = kref.rss(x)

@@ -9,12 +9,15 @@ import jax.numpy as jnp
 from repro.core.app import DataHandle
 from repro.core.process import Port, Process
 from repro.kernels import ref as kref
+from repro.launch.roofline import resolve_backend
 
 
 @dataclasses.dataclass(frozen=True)
 class ComplexElementProdParams:
     conjugate: bool = True
-    use_pallas: bool = False
+    #: True / False force a backend; "auto" asks the KernelChooser
+    #: (roofline + one-shot timed calibration per kernel/layout/device)
+    use_pallas: bool | str = "auto"
 
 
 conjugate = ComplexElementProdParams(conjugate=True)
@@ -51,7 +54,8 @@ class ComplexElementProd(Process):
             smaps = next(iter(aux["smaps"].values()))
         else:
             smaps = views["sensitivity_maps"]
-        if params.use_pallas:
+        if resolve_backend(params.use_pallas, "complexElementProd",
+                           views["kdata"], smaps, params.conjugate):
             fn = self.getApp().kernels.get("complexElementProd")
             prod = fn(views["kdata"], smaps, params.conjugate)
         else:

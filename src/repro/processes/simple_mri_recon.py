@@ -18,14 +18,69 @@ ports, infers its output spec, and lowers to its chain's launchable), so
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.process import (Port, Process, ProcessChain,
                                 ProfileParameters, PureLaunchable)
+from repro.kernels import ref as kref
+from repro.launch.roofline import resolve_backend
 from .complex_elementprod import ComplexElementProd, ComplexElementProdParams
 from .coil_combine import XImageSum, CombineParams
 from .fft import FFT, FFTParams
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedReconParams:
+    combine: str = "sum"           # "sum" (eq. 1) or "rss" (§IV-B)
+    norm: str = "ortho"
+    #: True / False force a backend; "auto" asks the KernelChooser
+    use_pallas: bool | str = "auto"
+
+
+class FusedMRIRecon(Process):
+    """The whole SimpleMRIRecon chain as ONE program:
+    IFFT2 → ×conj(smaps) → coil combine, no intermediate arena writes.
+
+    With the Pallas backend this is a single fused kernel for tile-sized
+    grids (in-kernel DFT-as-matmul IFFT; see ``kernels/mri_fused.py``) and
+    one fused epilogue pass after an XLA IFFT otherwise; with the XLA
+    backend it is one fused XLA program (the oracle).  Same smaps contract
+    as :class:`ComplexElementProd`: the optional ``smaps`` port streams or
+    broadcasts a separate maps Data, otherwise the maps are read from the
+    primary arena (``views["sensitivity_maps"]``).
+    """
+
+    kernel_names = ("mri_fused",)
+
+    ports = {"in": Port(names=("kdata",), dtype=jnp.complexfloating,
+                        doc="multicoil k-space (F, C, H, W); needs "
+                            "'sensitivity_maps' too unless the 'smaps' "
+                            "port is bound"),
+             "out": Port(names=("xdata",)),
+             "smaps": Port(optional=True, dtype=jnp.complexfloating,
+                           doc="sensitivity maps as a separate Data — a "
+                               "streaming input when bound to an edge, "
+                               "static broadcast when bound to Data")}
+
+    def apply(self, views, aux, params):
+        params = params or FusedReconParams()
+        if "smaps" in aux:
+            smaps = next(iter(aux["smaps"].values()))
+        else:
+            smaps = views["sensitivity_maps"]
+        k = views["kdata"]
+        if resolve_backend(params.use_pallas, "mriFusedRecon", k, smaps,
+                           combine=params.combine, norm=params.norm):
+            fn = self.getApp().kernels.get("mriFusedRecon")
+            out = fn(k, smaps, combine=params.combine, norm=params.norm)
+        else:
+            out = kref.mri_fused_recon(k, smaps, params.combine, params.norm)
+        if params.combine == "rss":
+            out = out.astype(jnp.float32)
+        return {"xdata": out}
 
 
 class SimpleMRIRecon(Process):
@@ -49,9 +104,15 @@ class SimpleMRIRecon(Process):
              "out": Port(names=("xdata",),
                          doc="reconstructed x-images (F, H, W)")}
 
-    def __init__(self, app=None, mode: str = "staged", use_pallas: bool = False,
+    def __init__(self, app=None, mode: str = "staged",
+                 use_pallas: bool | str = "auto",
                  in_place: bool = True, join: bool = False):
         super().__init__(app)
+        if mode not in ("staged", "fused", "fused_pallas"):
+            raise ValueError(
+                f"mode {mode!r}: expected 'staged' (one program per stage), "
+                "'fused' (stages traced into one XLA program) or "
+                "'fused_pallas' (single fused-epilogue kernel formulation)")
         self.mode = mode
         self.use_pallas = use_pallas
         self.in_place = in_place
@@ -76,6 +137,27 @@ class SimpleMRIRecon(Process):
 
     def init(self) -> None:
         app = self.getApp()
+        if self.mode == "fused_pallas":
+            # one-stage chain: the whole reconstruction is a single Process,
+            # so the chain launchable (and with it launch/stream/serve) sees
+            # exactly one pure program and zero intermediate arena handles
+            p_fused = FusedMRIRecon(app)
+            p_fused.in_handle = self.in_handle
+            p_fused.out_handle = self.out_handle
+            if self.join:
+                smaps_h = self.in_handles.get("smaps")
+                if smaps_h is None:
+                    raise RuntimeError(
+                        "SimpleMRIRecon(join=True) needs its 'smaps' input "
+                        "wired (in_handles['smaps'] or the smaps port bound "
+                        "to an edge)")
+                p_fused.in_handles["smaps"] = smaps_h
+            p_fused.set_launch_parameters(
+                FusedReconParams(use_pallas=self.use_pallas))
+            self.chain = ProcessChain(app, [p_fused], mode="staged")
+            self.chain.init()
+            self._initialized = True
+            return
         if self.in_place:
             work = self.in_handle
         else:
