@@ -80,6 +80,39 @@ def crossover_table(path=None):
               f" (staged) | — | no |")
 
 
+def ckpt_io_table(path=None):
+    """Render ``BENCH_ckpt_io.json``: legacy host-gather vs gather-free
+    sharded checkpoint save/restore (see docs/checkpoint.md)."""
+    import os
+    if path is None:
+        path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_ckpt_io.json")
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except (FileNotFoundError, ValueError):
+        print("\n### §Checkpoint I/O: PENDING "
+              "(run `python -m benchmarks.ckpt_io`)\n")
+        return
+    mesh = "x".join(str(v) for v in bench.get("mesh", {}).values())
+    print(f"\n### §Checkpoint I/O ({bench.get('state_mb', 0):.1f}MB state, "
+          f"mesh {mesh}, {len(bench.get('shard_files', []))} shard files, "
+          f"gather-free={bench.get('sharded_save_gather_free')}"
+          f"{', SMOKE sizes' if bench.get('smoke') else ''})\n")
+    print("| format | save | restore | elastic restore | gather phase "
+          "| shard-write phase |")
+    print("|--------|------|---------|-----------------|--------------"
+          "|-------------------|")
+    for fmt in ("legacy", "sharded"):
+        t = bench.get("timings", {}).get(fmt)
+        if not t:
+            continue
+        print(f"| {fmt} | {_fmt_t(t['save_s'])} | {_fmt_t(t['restore_s'])} "
+              f"| {_fmt_t(t['elastic_restore_s'])} "
+              f"| {_fmt_t(t['gather_s']) if t['gather_s'] else '0 (none)'} "
+              f"| {_fmt_t(t['shard_write_s']) if t['shard_write_s'] else '—'} |")
+
+
 def main():
     single = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_single.jsonl")
     multi = load(sys.argv[2] if len(sys.argv) > 2 else "results/dryrun_multi.jsonl")
@@ -129,6 +162,7 @@ def main():
               f"| {mfu*100:.2f}% |")
 
     crossover_table()
+    ckpt_io_table()
 
 
 if __name__ == "__main__":

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm lm_decode stream mesh serve fanin pallas]
+    PYTHONPATH=src python -m benchmarks.run [table1 fig2 overhead roofline lm lm_decode stream mesh serve fanin pallas ckpt]
 """
 from __future__ import annotations
 
@@ -12,7 +12,7 @@ import sys
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "fig2", "overhead", "roofline",
                                   "lm", "lm_decode", "stream", "mesh",
-                                  "serve", "fanin", "pallas"}
+                                  "serve", "fanin", "pallas", "ckpt"}
     print("name,us_per_call,derived")
     rows = []
     if "table1" in which:
@@ -48,6 +48,9 @@ def main() -> None:
     if "pallas" in which:
         from benchmarks.pallas_fusion import rows as pallas_rows
         rows += pallas_rows()
+    if "ckpt" in which:
+        from benchmarks.ckpt_io import rows as ckpt_rows
+        rows += ckpt_rows()
     for r in rows:
         print(r)
 

@@ -1,9 +1,11 @@
 from .checkpoint import (
+    CheckpointCorruptError,
     CheckpointManager,
+    cleanup,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
 )
 
-__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
-           "save_checkpoint"]
+__all__ = ["CheckpointCorruptError", "CheckpointManager", "cleanup",
+           "latest_step", "restore_checkpoint", "save_checkpoint"]

@@ -104,7 +104,17 @@ class CLapp:
 
     # ------------------------------------------------------------------ init
     def init(self, platform_traits: PlatformTraits | None = None,
-             device_traits: DeviceTraits | None = None) -> "CLapp":
+             device_traits: DeviceTraits | None = None,
+             model_axis: int = 1) -> "CLapp":
+        """Select devices and build the app mesh.
+
+        ``model_axis=m`` folds the selected devices into a 2D
+        ``(n//m, m)`` mesh so annotated programs partition over the
+        ``model`` axis (:data:`repro.launch.mesh.LOGICAL_AXES`) while
+        streaming keeps sharding batches over ``data`` — the device count
+        must be a multiple of ``m``.  The default keeps the model axis
+        trivial (pure data parallelism).  Ignored when a mesh was provided
+        explicitly via :meth:`set_mesh`."""
         platform_traits = platform_traits or PlatformTraits()
         device_traits = device_traits or DeviceTraits()
 
@@ -143,7 +153,7 @@ class CLapp:
             # spanning deselected ones; a mesh provided via set_mesh() is
             # respected and never overwritten.
             from repro.launch.mesh import make_data_mesh  # lazy: keep core light
-            self._mesh = make_data_mesh(devices)
+            self._mesh = make_data_mesh(devices, model=model_axis)
         return self
 
     @property

@@ -106,7 +106,7 @@ def plan_layout(specs: Iterable[Tuple[str, Sequence[int], Any]]) -> ArenaLayout:
     offset = 0
     for name, shape, dtype in specs:
         nd = np.dtype(jnp.dtype(dtype))
-        nbytes = int(np.prod(shape, dtype=np.int64)) * nd.itemsize if len(tuple(shape)) else nd.itemsize
+        # np.prod of an empty shape is 1, so 0-d scalars get one item
         nbytes = int(np.prod(tuple(shape), dtype=np.int64)) * nd.itemsize
         entries.append(
             ArenaEntry(name=str(name), shape=tuple(int(s) for s in shape),

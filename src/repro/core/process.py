@@ -243,6 +243,22 @@ class Port:
 # --------------------------------------------------------------------------
 _COMPILE_CACHE: Dict[Any, Any] = {}
 
+# Mesh the current aot_compile() is lowering under (None outside a compile).
+# This is the sharding-propagation hook behind the logical-axis annotation
+# layer: `repro.launch.mesh.shard_by_logical` resolves it at trace time, so
+# ONE annotated apply() body lowers model-sharded under the app's 2D mesh,
+# and unsharded (a total no-op) inside pinned per-device/per-group
+# executables whose mesh has a trivial `model` axis.  A plain module global
+# (not a contextvar): aot_compile holds no locks and the compile cache is
+# only mutated from the thread that traces, which is the thread that reads
+# this.
+_CURRENT_COMPILE_MESH: Any = None
+
+
+def current_compile_mesh():
+    """The mesh of the in-progress AOT lowering (None outside one)."""
+    return _CURRENT_COMPILE_MESH
+
 
 def compile_cache_stats() -> Tuple[int, int]:
     hits = _COMPILE_CACHE.get("__hits__", 0)
@@ -309,15 +325,53 @@ def aot_compile(fn: Callable, specs: Sequence[Any], *, tag: str,
         kwargs["out_shardings"] = out_shardings
     jitted = jax.jit(fn, donate_argnums=donate_argnums, **kwargs)
     t0 = time.perf_counter()
-    if mesh is not None:
-        with mesh:
+    global _CURRENT_COMPILE_MESH
+    prev_mesh = _CURRENT_COMPILE_MESH
+    _CURRENT_COMPILE_MESH = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                compiled = jitted.lower(*specs).compile()
+        else:
             compiled = jitted.lower(*specs).compile()
-    else:
-        compiled = jitted.lower(*specs).compile()
+    finally:
+        _CURRENT_COMPILE_MESH = prev_mesh
     if profile is not None:
         profile.record_phase("compile", time.perf_counter() - t0)
     _COMPILE_CACHE[key] = compiled
     return compiled
+
+
+def _conform_blobs(compiled, blobs):
+    """device_put any blob whose placement doesn't match what ``compiled``
+    expects.
+
+    A program whose apply body is ``shard_map``-partitioned over the mesh's
+    ``model`` axis (see :func:`repro.launch.mesh.shard_by_logical`) lowers
+    with its unspecified inputs replicated across the whole mesh — but in
+    single-launch mode the arena blobs live on the primary device only.
+    Conforming here (instead of eagerly replicating every upload) keeps the
+    1D fast path untouched and moves data at most once per blob: the
+    conformed output blob already matches on the next stage's launch.
+    Returns ``(blobs, moved_any)``."""
+    try:
+        expected = compiled.input_shardings[0]
+    except Exception:
+        return blobs, False
+    if len(expected) != len(blobs):
+        return blobs, False
+    out, moved = [], False
+    for b, s in zip(blobs, expected):
+        try:
+            ok = b.sharding.is_equivalent_to(s, b.ndim)
+        except Exception:
+            ok = True
+        if ok:
+            out.append(b)
+        else:
+            out.append(jax.device_put(b, s))
+            moved = True
+    return out, moved
 
 
 def _layout_fingerprint(app, la: "PureLaunchable") -> Any:
@@ -736,10 +790,11 @@ class Process:
                 app.host2device(h)
                 uploaded = True
             aux_blobs.append(d.device_blob)
-        if uploaded and profile is not None and profile.enable:
+        blobs, moved = _conform_blobs(self._compiled, in_blobs + aux_blobs)
+        if (uploaded or moved) and profile is not None and profile.enable:
             profile.record_phase("transfer", time.perf_counter() - t_up)
         t0 = time.perf_counter()
-        out_blob = self._compiled(*in_blobs, *aux_blobs)
+        out_blob = self._compiled(*blobs)
         if profile is not None and profile.enable:
             jax.block_until_ready(out_blob)
             dt = time.perf_counter() - t0

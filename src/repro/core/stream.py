@@ -362,20 +362,35 @@ class BatchedProcess:
     (a trivial single-device mesh): the proportional-split plan compiles
     one of these per ``(device, rows)`` so each device can carry a
     different share of a batch.  Mutually exclusive with ``sharded``.
+
+    ``group=...`` pins to one model GROUP — the devices of one data-axis
+    row of a 2D app mesh, compiled under a ``(1, m)``
+    :func:`~repro.launch.mesh.make_group_mesh` with the sub-batch
+    replicated across the group; the program's ``shard_by_logical``
+    annotations then partition its per-item grids over the group's
+    ``model`` axis.  A singleton group is byte-identical to ``device=``
+    (same mesh fingerprint, same cached executable).
     """
 
     def __init__(self, process, batch: int, *, sharded: bool = False,
                  device: Optional[jax.Device] = None,
+                 group: Optional[Tuple[jax.Device, ...]] = None,
                  profile: ProfileParameters | None = None):
         if batch < 1:
             raise ValueError(f"batch must be >= 1, got {batch}")
-        if sharded and device is not None:
-            raise ValueError("sharded=True and device= are mutually "
-                             "exclusive (a pinned program spans one device)")
+        if group is not None and len(group) == 1:
+            device, group = group[0], None       # singleton group: pin plain
+        if sharded and (device is not None or group is not None):
+            raise ValueError("sharded=True and device=/group= are mutually "
+                             "exclusive (a pinned program spans one device "
+                             "group)")
+        if device is not None and group is not None:
+            raise ValueError("device= and group= are mutually exclusive")
         self.process = process
         self.batch = batch
         self.sharded = sharded
         self.device = device
+        self.group = group
         self.profile = profile      # records "compile" phase on cache miss
         #: placement of stacked input batches (None = primary device); set
         #: by init() and reused by stream_launch as the StreamQueue target
@@ -397,13 +412,18 @@ class BatchedProcess:
         specs += p._aux_specs(la)
         in_shardings = out_shardings = None
         mesh = app.mesh
-        if self.device is not None:
-            # pinned single-device program: compile under a trivial mesh
-            # holding only that device, everything replicated on it.  The
-            # mesh/sharding fingerprints in the compile cache key keep one
-            # executable per (device, rows) — they never collide with the
-            # mesh-sharded or default-placement variants.
-            mesh = _single_device_mesh(self.device)
+        if self.device is not None or self.group is not None:
+            # pinned program: compile under a trivial mesh holding only
+            # that device (or the group's (1, m) mesh), everything
+            # replicated on it.  The mesh/sharding fingerprints in the
+            # compile cache key keep one executable per (device|group,
+            # rows) — they never collide with the mesh-sharded or
+            # default-placement variants.
+            if self.group is not None:
+                from repro.launch.mesh import make_group_mesh
+                mesh = make_group_mesh(self.group)
+            else:
+                mesh = _single_device_mesh(self.device)
             pinned = jax.sharding.NamedSharding(
                 mesh, jax.sharding.PartitionSpec())
             self.batch_sharding = pinned
@@ -519,6 +539,8 @@ class _BatchPlan:
         # pinned executables, per-device aux replicas, and the live
         # completion-timer threads feeding the registry
         self._devices: Tuple[jax.Device, ...] = ()
+        self._groups: Tuple[Tuple[jax.Device, ...], ...] = ()
+        self._group_by_leader: dict = {}
         self._la: Optional[PureLaunchable] = None
         self._pinned: dict = {}
         self._device_aux_cache: dict = {}
@@ -552,15 +574,26 @@ class _BatchPlan:
                 "lanes=True) needs the app mesh (CLapp.init builds one "
                 "over the selected devices)")
         other = {a: int(s) for a, s in mesh.shape.items()
-                 if a != "data" and int(s) != 1}
+                 if a not in ("data", "model") and int(s) != 1}
         if other:
             raise ValueError(
-                "per-device batch carving (split='proportional' / "
-                "lanes=True) needs a pure data-parallel mesh; "
+                "per-group batch carving (split='proportional' / "
+                "lanes=True) needs a (data, model) mesh; "
                 f"axes {sorted(other)} are non-trivial")
         for name in p.kernel_names:
             app.kernels.load(name)
-        self._devices = tuple(mesh.devices.flat)
+        # carve units are data-axis GROUPS: each row of the (data, model)
+        # device grid is one model group that co-executes its sub-batch
+        # (shard_by_logical partitions per-item grids over the group's
+        # model axis).  On a 1D mesh every group is a single device, which
+        # reduces exactly to the historical per-device carving.
+        n_data = int(dict(mesh.shape).get("data", 1))
+        grid = np.asarray(mesh.devices, dtype=object).reshape(n_data, -1)
+        self._groups = tuple(tuple(row) for row in grid)
+        # group leaders key the profile registry and the executable cache:
+        # a group's measured rate is the rate of its co-executing whole
+        self._devices = tuple(g[0] for g in self._groups)
+        self._group_by_leader = {g[0].id: g for g in self._groups}
         self._la = p.launchable()
         self.precompile(self.batch)
         return self
@@ -642,15 +675,28 @@ class _BatchPlan:
 
     def device_executable(self, device: jax.Device, rows: int
                           ) -> BatchedProcess:
-        """The pinned executable running ``rows`` items on ``device``
-        (lazy; backed by the global compile cache)."""
+        """The pinned executable running ``rows`` items on ``device``'s
+        model group (``device`` is the group leader; on a 1D mesh the
+        group is just the device).  Lazy; backed by the global compile
+        cache."""
         key = (device.id, rows)
         bp = self._pinned.get(key)
         if bp is None:
-            bp = BatchedProcess(self.process, rows, device=device,
+            group = self._group_by_leader.get(device.id, (device,))
+            bp = BatchedProcess(self.process, rows, group=group,
                                 profile=self.profile).init()
             self._pinned[key] = bp
         return bp
+
+    def lane_sharding(self, device: jax.Device) -> jax.sharding.Sharding:
+        """Placement of one upload lane / aux replica: the leader's model
+        group replicated (plain pinned sharding on a 1D mesh)."""
+        group = self._group_by_leader.get(device.id, (device,))
+        if len(group) == 1:
+            from repro.launch.mesh import pinned_sharding
+            return pinned_sharding(device)
+        from repro.launch.mesh import group_sharding
+        return group_sharding(group)
 
     def split_vector(self, rows: int) -> Tuple[int, ...]:
         """The per-device row counts for one ``rows``-item group: measured-
@@ -773,9 +819,8 @@ class _BatchPlan:
             return ()
         cached = self._device_aux_cache.get(device.id)
         if cached is None:
-            from repro.launch.mesh import pinned_sharding
-            cached = tuple(jax.device_put(b, pinned_sharding(device))
-                           for b in aux_blobs)
+            target = self.lane_sharding(device)
+            cached = tuple(jax.device_put(b, target) for b in aux_blobs)
             self._device_aux_cache[device.id] = cached
         return cached
 
@@ -1041,10 +1086,9 @@ class _UploadLanes:
                 off = sum(ss.split[:j])
                 yield ss.blob[off:off + ss.split[j]]
 
-        from repro.launch.mesh import pinned_sharding
         self._devices = devices
         self._lanes = [
-            StreamQueue(lane_rows(j), device=pinned_sharding(dev),
+            StreamQueue(lane_rows(j), device=plan.lane_sharding(dev),
                         depth=depth, profile=profile)
             for j, dev in enumerate(devices)]
         self._splits = fan.branch(len(devices))

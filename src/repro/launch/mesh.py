@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -43,15 +43,28 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 def make_data_mesh(devices: Sequence[jax.Device],
                    axis_names: Tuple[str, str] = ("data", "model"),
+                   model: int = 1,
                    ) -> jax.sharding.Mesh:
-    """An explicit-device ``(data, model)`` mesh: every given device on the
-    ``data`` axis, ``model`` trivial.  This is the mesh :class:`repro.core.
-    app.CLapp` builds over its *selected* devices (which may be a subset or
-    reordering of ``jax.devices()``, so ``jax.make_mesh`` — which always
-    takes the first N global devices — is not usable here)."""
+    """An explicit-device ``(data, model)`` mesh over the given devices.
+
+    ``model=1`` (the default) puts every device on the ``data`` axis — the
+    pure data-parallel mesh :class:`repro.core.app.CLapp` builds over its
+    *selected* devices (which may be a subset or reordering of
+    ``jax.devices()``, so ``jax.make_mesh`` — which always takes the first
+    N global devices — is not usable here).  ``model=m`` folds the devices
+    into a 2D ``(len(devices)//m, m)`` grid: consecutive devices form one
+    model group, so a batch row sharded over ``data`` lands on a group
+    whose ``m`` members co-execute one ``shard_map``-partitioned program
+    (see :data:`LOGICAL_AXES` / :func:`shard_by_logical`)."""
     if not devices:
         raise ValueError("cannot build a mesh over zero devices")
-    grid = np.array(devices, dtype=object).reshape(len(devices), 1)
+    if model < 1:
+        raise ValueError(f"model-axis size must be >= 1, got {model}")
+    if len(devices) % model:
+        raise ValueError(
+            f"{len(devices)} device(s) do not fold into a (data, model={model}) "
+            "mesh; the model-axis size must divide the device count")
+    grid = np.array(devices, dtype=object).reshape(len(devices) // model, model)
     return jax.sharding.Mesh(grid, axis_names)
 
 
@@ -73,12 +86,160 @@ def make_device_mesh(device: jax.Device,
         np.array([[device]], dtype=object), axis_names)
 
 
+def make_group_mesh(devices: Sequence[jax.Device],
+                    axis_names: Tuple[str, str] = ("data", "model"),
+                    ) -> jax.sharding.Mesh:
+    """A ``(1, m)`` mesh over one model group — the compile/placement
+    target of per-group pinned executables when the app mesh is 2D (the
+    generalization of :func:`make_device_mesh` the streaming executor's
+    proportional-split/lanes machinery carves batches over).  A singleton
+    group reduces exactly to :func:`make_device_mesh` (same shape, axes and
+    device ids, so compile-cache fingerprints coincide)."""
+    if not devices:
+        raise ValueError("cannot build a group mesh over zero devices")
+    return jax.sharding.Mesh(
+        np.array(list(devices), dtype=object).reshape(1, len(devices)),
+        axis_names)
+
+
 def pinned_sharding(device: jax.Device) -> jax.sharding.NamedSharding:
     """Fully-replicated ``NamedSharding`` over :func:`make_device_mesh` —
     where a per-device sub-batch (upload lane) or per-device aux replica
     lands."""
     return jax.sharding.NamedSharding(
         make_device_mesh(device), jax.sharding.PartitionSpec())
+
+
+def group_sharding(devices: Sequence[jax.Device]
+                   ) -> jax.sharding.NamedSharding:
+    """Fully-replicated ``NamedSharding`` over :func:`make_group_mesh` —
+    where a per-group sub-batch or aux replica lands on a 2D mesh.  The
+    ``shard_map``-partitioned program inside the group's executable then
+    splits the replicated rows over the group's ``model`` axis."""
+    return jax.sharding.NamedSharding(
+        make_group_mesh(devices), jax.sharding.PartitionSpec())
+
+
+# ---------------------------------------------------------------------------
+# Logical axes: name every weight/activation axis ONCE, bind names to mesh
+# axes in one table
+# ---------------------------------------------------------------------------
+
+#: THE logical-axis table — the single place a logical array-axis name is
+#: bound to a mesh axis (or to ``None`` = never partitioned).  Processes
+#: annotate their arrays with these names (``shard_by_logical``) instead of
+#: naming mesh axes, so re-binding an axis (e.g. moving ``frame`` off the
+#: ``model`` axis) is a one-line change here, not a hunt through kernels.
+LOGICAL_AXES: Dict[str, Optional[str]] = {
+    # streamed items / decode batch rows ride the data axis (the streaming
+    # executor's batch placement; see repro.core.stream)
+    "batch": "data",
+    # large per-item grids split over the model axis: independent MRI
+    # frames, and decode slots (each slot's row + cache strip is
+    # self-contained up to the shared scalar position, a pmax)
+    "frame": "model",
+    "slot": "model",
+    # per-item working axes — never partitioned
+    "coil": None, "height": None, "width": None,
+    "layer": None, "head": None, "seq": None, "embed": None, "vocab": None,
+}
+
+
+def mesh_axis(logical: Optional[str]) -> Optional[str]:
+    """Mesh axis a logical axis name is bound to (``None`` = replicated).
+    Unknown names are an error — the table is the contract."""
+    if logical is None:
+        return None
+    if logical not in LOGICAL_AXES:
+        raise KeyError(
+            f"unknown logical axis {logical!r}; add it to "
+            f"repro.launch.mesh.LOGICAL_AXES (known: {sorted(LOGICAL_AXES)})")
+    return LOGICAL_AXES[logical]
+
+
+def logical_pspec(axes: Optional[Sequence[Optional[str]]]
+                  ) -> jax.sharding.PartitionSpec:
+    """``PartitionSpec`` for one array whose dims carry the given logical
+    names (``None`` entries — and ``axes=None`` entirely — replicate)."""
+    if axes is None:
+        return jax.sharding.PartitionSpec()
+    return jax.sharding.PartitionSpec(*(mesh_axis(a) for a in axes))
+
+
+def logical_sharding(mesh: jax.sharding.Mesh,
+                     axes: Optional[Sequence[Optional[str]]]
+                     ) -> jax.sharding.NamedSharding:
+    """``NamedSharding`` over ``mesh`` from logical axis names."""
+    return jax.sharding.NamedSharding(mesh, logical_pspec(axes))
+
+
+def model_axis_size(mesh: Optional[jax.sharding.Mesh]) -> int:
+    """Size of the mesh's ``model`` axis (1 when there is no mesh)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get("model", 1))
+
+
+def shard_by_logical(fn: Callable,
+                     in_axes: Sequence[Optional[Sequence[Optional[str]]]],
+                     out_axes,
+                     *, mesh: Optional[jax.sharding.Mesh] = None) -> Callable:
+    """Partition ``fn`` over the mesh with :func:`jax.experimental.shard_map
+    .shard_map`, with per-dim *logical* axis names instead of mesh axes.
+
+    ``in_axes`` holds one annotation per positional argument: a tuple of
+    logical names (one per dim, ``None`` = replicated dim) or ``None`` to
+    replicate the whole argument (pytree arguments allowed there).
+    ``out_axes`` annotates a single output the same way; a **list** of
+    such annotations annotates a tuple-returning ``fn`` per output.
+
+    The wrapper is a **total no-op** — it calls ``fn`` directly — whenever
+    partitioning cannot apply: no mesh (``mesh=None`` and no compile in
+    progress), every bound mesh axis trivial, or any partitioned dim not
+    divisible by its axis size.  So annotated processes stay bit-exact and
+    compile identically on 1D meshes, and degrade gracefully on shapes the
+    mesh does not divide.  ``mesh=None`` resolves the mesh the enclosing
+    AOT compilation is lowering under (:func:`repro.core.process.
+    current_compile_mesh`), which is how one annotated ``apply`` body runs
+    unsharded in a pinned per-device executable and ``model``-sharded in
+    the same pipeline's 2D mesh executable."""
+    in_axes = tuple(in_axes)
+
+    def wrapped(*args):
+        from repro.core.process import current_compile_mesh  # lazy: no cycle
+        m = mesh if mesh is not None else current_compile_mesh()
+        if m is None:
+            return fn(*args)
+        if len(args) != len(in_axes):
+            raise ValueError(
+                f"shard_by_logical: {len(args)} argument(s) but "
+                f"{len(in_axes)} in_axes annotation(s)")
+        shape = dict(m.shape)
+        in_specs = [logical_pspec(a) for a in in_axes]
+        if isinstance(out_axes, list):             # list = one entry per output
+            out_specs: Any = tuple(logical_pspec(a) for a in out_axes)
+            flat_out = list(out_specs)
+        else:
+            out_specs = logical_pspec(out_axes)
+            flat_out = [out_specs]
+        used = {ax for spec in in_specs + flat_out
+                for ax in spec if ax is not None}
+        if not any(shape.get(ax, 1) > 1 for ax in used):
+            return fn(*args)                       # nothing to partition
+        for arg, axes_ann in zip(args, in_axes):
+            if axes_ann is None:
+                continue
+            for d, name in enumerate(axes_ann):
+                ax = mesh_axis(name)
+                if ax is None:
+                    continue
+                if arg.shape[d] % shape.get(ax, 1):
+                    return fn(*args)               # indivisible: stay whole
+        from jax.experimental.shard_map import shard_map
+        return shard_map(fn, mesh=m, in_specs=tuple(in_specs),
+                         out_specs=out_specs, check_rep=False)(*args)
+
+    return wrapped
 
 
 # ---------------------------------------------------------------------------

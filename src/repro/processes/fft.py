@@ -12,6 +12,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core.process import Port, Process
+from repro.launch.mesh import shard_by_logical
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,7 +27,16 @@ BACKWARD = FFTParams("backward")
 
 
 class FFT(Process):
-    """2-D (I)FFT over the trailing two axes of every complex NDArray."""
+    """2-D (I)FFT over the trailing two axes of every complex NDArray.
+
+    Arrays of ndim >= 3 carry a leading stack of independent frames, so
+    the transform is annotated with the ``frame`` logical axis
+    (:data:`repro.launch.mesh.LOGICAL_AXES`): compiled under a mesh whose
+    ``model`` axis is non-trivial, the big FFT grid is ``shard_map``-
+    partitioned frame-wise across the model group — bit-identical to the
+    unsharded transform (frames are independent; there is no cross-shard
+    reduction) and a total no-op on 1D meshes or indivisible frame
+    counts."""
 
     ports = {"in": Port(doc="any Data; complex arrays of ndim>=2 are "
                             "transformed, everything else passes through"),
@@ -34,14 +44,18 @@ class FFT(Process):
 
     def apply(self, views, aux, params):
         params = params or BACKWARD
+        fft2 = jnp.fft.ifft2 if params.direction == "backward" else jnp.fft.fft2
         out = {}
         for name, v in views.items():
             sel = params.var is None or name == params.var
             if sel and jnp.issubdtype(v.dtype, jnp.complexfloating) and v.ndim >= 2:
-                if params.direction == "backward":
-                    out[name] = jnp.fft.ifft2(v, norm=params.norm).astype(v.dtype)
+                def tx(x, _fft2=fft2, _dt=v.dtype):
+                    return _fft2(x, norm=params.norm).astype(_dt)
+                if v.ndim >= 3:
+                    axes = ("frame",) + (None,) * (v.ndim - 1)
+                    out[name] = shard_by_logical(tx, [axes], axes)(v)
                 else:
-                    out[name] = jnp.fft.fft2(v, norm=params.norm).astype(v.dtype)
+                    out[name] = tx(v)
             else:
                 out[name] = v
         return out

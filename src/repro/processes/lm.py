@@ -47,7 +47,9 @@ import numpy as np
 from repro.core.app import CLapp
 from repro.core.data import Data
 from repro.core.graph import Pipeline
-from repro.core.process import Port, Process, ProfileParameters
+from repro.core.process import (Port, Process, ProfileParameters,
+                                current_compile_mesh)
+from repro.launch.mesh import mesh_axis, model_axis_size
 
 
 class TreeCodec:
@@ -228,7 +230,16 @@ class DecodeStep(_LMProcess):
     Matches the legacy ``ServeEngine.step`` math exactly: decode every row
     at ``pos = positions.max()`` (inactive rows keep re-feeding their last
     token; the per-position cache masks stale entries), then advance only
-    the active rows."""
+    the active rows.
+
+    Compiled under a mesh whose ``model`` axis is non-trivial, the step is
+    ``shard_map``-partitioned over decode **slots** (the ``slot`` logical
+    axis, :data:`repro.launch.mesh.LOGICAL_AXES`): each model-group member
+    decodes its strip of rows + cache, with the one cross-slot quantity —
+    the shared position scalar — reduced by an exact integer ``pmax``, so
+    the partitioned step is bit-identical to the 1D one.  No-op when the
+    mesh is 1D, the slot count does not divide, or any cache leaf's batch
+    axis cannot be identified."""
 
     ports = {"in": Port(names=("token", "positions", "active")),
              "out": Port(names=("token", "positions", "active")),
@@ -238,19 +249,62 @@ class DecodeStep(_LMProcess):
         super().__init__(app, model, wcodec, ccodec, max_len=max_len,
                          tag="decode_step")
 
+    @staticmethod
+    def _slot_axis(leaf, b: int) -> Optional[int]:
+        """Batch (slot) axis of one cache leaf: 0 for per-row leaves, 1 for
+        stacked-layer ``(L, B, ...)`` leaves — the same heuristic as
+        ``_splice_row`` (ambiguous when L == B; axis 0 wins there)."""
+        if leaf.ndim >= 1 and leaf.shape[0] == b:
+            return 0
+        if leaf.ndim >= 2 and leaf.shape[1] == b:
+            return 1
+        return None
+
     def apply(self, views, aux, params):
         w = self._weights(aux)
         token = views["token"]
         positions = views["positions"]
         active = views["active"]
         cache = self.ccodec.unflatten(views)
-        pos = jnp.max(positions).astype(jnp.int32)
-        logits, cache = self.model.decode_step(w, token, pos, cache)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B, 1)
-        live = active[:, None] > 0
-        out = {"token": jnp.where(live, nxt, token),
-               "positions": positions + active,
-               "active": active}
+
+        def step(w, token, positions, active, cache, pos):
+            logits, cache = self.model.decode_step(w, token, pos, cache)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, 1)
+            live = active[:, None] > 0
+            return (jnp.where(live, nxt, token), positions + active,
+                    active, cache)
+
+        mesh = current_compile_mesh()
+        ax = mesh_axis("slot")          # mesh axis the slot dim is bound to
+        b = int(token.shape[0])
+        leaves, treedef = jax.tree_util.tree_flatten(cache)
+        slot_axes = [self._slot_axis(leaf, b) for leaf in leaves]
+        nm = model_axis_size(mesh) if ax == "model" else 1
+        if nm > 1 and b % nm == 0 and all(a is not None for a in slot_axes):
+            from jax.experimental.shard_map import shard_map
+            P = jax.sharding.PartitionSpec
+            cache_specs = tuple(
+                P(*([None] * a + [ax])) for a in slot_axes)
+
+            def body(w, token, positions, active, *leaves):
+                cache = jax.tree_util.tree_unflatten(treedef, leaves)
+                pos = jax.lax.pmax(jnp.max(positions), ax).astype(jnp.int32)
+                t, p, act, cache = step(w, token, positions, active,
+                                        cache, pos)
+                return (t, p, act) + tuple(jax.tree_util.tree_leaves(cache))
+
+            outs = shard_map(
+                body, mesh=mesh,
+                in_specs=(P(), P(ax, None), P(ax), P(ax)) + cache_specs,
+                out_specs=(P(ax, None), P(ax), P(ax)) + cache_specs,
+                check_rep=False)(w, token, positions, active, *leaves)
+            token, positions, active = outs[0], outs[1], outs[2]
+            cache = jax.tree_util.tree_unflatten(treedef, outs[3:])
+        else:
+            pos = jnp.max(positions).astype(jnp.int32)
+            token, positions, active, cache = step(
+                w, token, positions, active, cache, pos)
+        out = {"token": token, "positions": positions, "active": active}
         out.update(self.ccodec.flatten(cache))
         return out
 

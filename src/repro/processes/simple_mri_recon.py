@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core.process import (Port, Process, ProcessChain,
                                 ProfileParameters, PureLaunchable)
 from repro.kernels import ref as kref
+from repro.launch.mesh import shard_by_logical
 from repro.launch.roofline import resolve_backend
 from .complex_elementprod import ComplexElementProd, ComplexElementProdParams
 from .coil_combine import XImageSum, CombineParams
@@ -72,12 +73,24 @@ class FusedMRIRecon(Process):
         else:
             smaps = views["sensitivity_maps"]
         k = views["kdata"]
+        # backend resolution happens ONCE on the full grid; the chosen
+        # program is then partitioned frame-wise over the mesh's model
+        # axis (frames are independent — no collective, bit-identical)
         if resolve_backend(params.use_pallas, "mriFusedRecon", k, smaps,
                            combine=params.combine, norm=params.norm):
-            fn = self.getApp().kernels.get("mriFusedRecon")
-            out = fn(k, smaps, combine=params.combine, norm=params.norm)
+            kfn = self.getApp().kernels.get("mriFusedRecon")
+
+            def body(kf, sm):
+                return kfn(kf, sm, combine=params.combine, norm=params.norm)
         else:
-            out = kref.mri_fused_recon(k, smaps, params.combine, params.norm)
+            def body(kf, sm):
+                return kref.mri_fused_recon(kf, sm, params.combine,
+                                            params.norm)
+        out = shard_by_logical(
+            body,
+            [("frame", "coil", "height", "width"),
+             ("coil", "height", "width")],
+            ("frame", "height", "width"))(k, smaps)
         if params.combine == "rss":
             out = out.astype(jnp.float32)
         return {"xdata": out}

@@ -446,6 +446,46 @@ class PipelineReplica(Replica):
             return total
         return self.profile.rate
 
+    def warm_start(self, directory: str, handle, *,
+                   step: Optional[int] = None) -> int:
+        """Spin-up restore: fill the Data behind ``handle`` (weights,
+        sensitivity maps, any static aux) from the newest complete
+        checkpoint in ``directory`` and upload it to the replica's
+        devices.  Checkpoint contract: a ``{array name: array}`` tree, as
+        written by ``save_checkpoint(dir, step, {a.name: ... for a in
+        data})``.  Elastic across replica meshes — a sharded checkpoint
+        saved on a different mesh shape restores through the
+        logical-layout fallback; torn steps are skipped in favour of the
+        last complete one.  Returns the restored step.
+
+        ``handle`` is the ``DataHandle`` of an already-registered Data
+        (live update: the refreshed arrays are re-uploaded immediately),
+        or the bound :class:`~repro.core.data.Data` object itself for a
+        replica whose server has not built yet — spin-up before first
+        traffic — in which case the restored hosts ride the build's own
+        upload."""
+        import numpy as np
+
+        from repro.ckpt import latest_step, restore_checkpoint
+        from repro.core.data import Data
+
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no complete checkpoints in {directory}")
+        if isinstance(handle, Data):
+            data, handle = handle, None
+        else:
+            data = self.app.getData(handle)
+        like = {a.name: np.zeros(a.shape, np.dtype(a.dtype)) for a in data}
+        restored = restore_checkpoint(directory, like, step=step)
+        for a in data:
+            a.set_host(np.asarray(restored[a.name]))
+        if handle is not None:
+            self.app.host2device(handle)
+        return step
+
 
 class CallableReplica(Replica):
     """A plain function as a backend — ``fn(payload) -> result`` per

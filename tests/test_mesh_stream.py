@@ -664,3 +664,205 @@ def test_single_device_traits_on_multi_device_host(rng):
         np.testing.assert_array_equal(
             o.get_ndarray(0).host, d.get_ndarray(0).host * 4.0)
         assert set(o.device_blob.devices()) == {app.device}
+
+
+# ---------------------------------------------------------------------------
+# 2D sharding: the model axis, end to end (PR 10 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_logical_axis_table_contract():
+    """The logical-axis table is the single binding point: batch rides the
+    data axis, frame/slot ride the model axis, per-item working axes are
+    never partitioned, and unknown names are an error — not silently
+    replicated."""
+    from repro.launch.mesh import (LOGICAL_AXES, logical_pspec, mesh_axis,
+                                   model_axis_size, shard_by_logical)
+    P = jax.sharding.PartitionSpec
+    assert LOGICAL_AXES["batch"] == "data"
+    assert LOGICAL_AXES["frame"] == "model"
+    assert LOGICAL_AXES["slot"] == "model"
+    assert all(LOGICAL_AXES[a] is None
+               for a in ("coil", "height", "width", "layer", "head"))
+    assert logical_pspec(("frame", "coil", None)) == P("model", None, None)
+    assert logical_pspec(None) == P()
+    with pytest.raises(KeyError, match="logical axis"):
+        mesh_axis("no_such_axis")
+    assert model_axis_size(None) == 1
+    # no mesh anywhere -> the wrapper is a total no-op (calls fn directly)
+    f = shard_by_logical(lambda x: x * 2, [("frame", None)], ("frame", None))
+    np.testing.assert_array_equal(
+        f(np.ones((4, 2), np.float32)), np.full((4, 2), 2.0, np.float32))
+
+
+@needs_8_devices
+def test_model_axis_mesh_construction():
+    """CLapp().init(model_axis=m) folds the selected devices into a
+    (data, model) grid; indivisible folds are a loud error."""
+    from repro.launch.mesh import make_data_mesh, model_axis_size
+    app = CLapp().init(model_axis=4)
+    assert dict(app.mesh.shape) == {"data": 2, "model": 4}
+    assert model_axis_size(app.mesh) == 4
+    # consecutive devices form one model group (row-major grid)
+    grid = np.asarray(app.mesh.devices, dtype=object)
+    assert grid.shape == (2, 4)
+    assert [d.id for d in grid[0]] == sorted(d.id for d in grid[0])
+    with pytest.raises(ValueError, match="divide"):
+        make_data_mesh(jax.devices(), model=3)
+
+
+@needs_8_devices
+def test_recon_2d_bit_identical_three_modes(rng):
+    """The shard_map'd fused MRI recon on a (data=2, model=4) mesh is
+    BIT-identical to the same program on a trivial mesh — in launch,
+    sharded stream (equal + proportional splits, lanes) and serve.  The
+    frames axis (F=8) splits 2-per-device over each model group; shard_map
+    partitioning must not change a single ulp vs the unpartitioned jit."""
+    from repro.core import KData
+    from repro.processes import SimpleMRIRecon
+
+    F, C, H, W = 8, 3, 16, 16
+    def _c(shape):
+        return (rng.standard_normal(shape)
+                + 1j * rng.standard_normal(shape)).astype(np.complex64)
+    smaps = _c((C, H, W))
+    inputs = [KData({"kdata": _c((F, C, H, W)),
+                     "sensitivity_maps": smaps.copy()}) for _ in range(6)]
+
+    app1 = CLapp().init(device_traits=DeviceTraits(count=1))
+    oracle = Pipeline(app1) | SimpleMRIRecon(app1, mode="fused_pallas")
+    want = [oracle.run(d).get_ndarray(0).host.copy() for d in inputs]
+
+    app = CLapp().init(model_axis=4)
+    assert dict(app.mesh.shape) == {"data": 2, "model": 4}
+    fused = Pipeline(app) | SimpleMRIRecon(app, mode="fused_pallas")
+
+    got_launch = [fused.run(d).get_ndarray(0).host.copy() for d in inputs]
+    got_stream = fused.run(inputs, mode="stream", batch=2, sharded=True)
+    got_prop = fused.run(inputs, mode="stream", batch=2, sharded=True,
+                         split="proportional")
+    got_lanes = fused.run(inputs, mode="stream", batch=4, sharded=True,
+                          lanes=True)
+    got_serve = fused.run(inputs, mode="serve", batch=2, sharded=True)
+    for i in range(len(inputs)):
+        np.testing.assert_array_equal(got_launch[i], want[i],
+                                      err_msg=f"launch[{i}]")
+        np.testing.assert_array_equal(got_stream[i].get_ndarray(0).host,
+                                      want[i], err_msg=f"stream[{i}]")
+        np.testing.assert_array_equal(got_prop[i].get_ndarray(0).host,
+                                      want[i], err_msg=f"proportional[{i}]")
+        np.testing.assert_array_equal(got_lanes[i].get_ndarray(0).host,
+                                      want[i], err_msg=f"lanes[{i}]")
+        np.testing.assert_array_equal(got_serve[i].get_ndarray(0).host,
+                                      want[i], err_msg=f"serve[{i}]")
+
+
+@needs_8_devices
+def test_decode_2d_bit_identical():
+    """DecodeStep on a (2, 4) mesh: the B=4 decode batch shard_maps one
+    slot per model-group device (position via exact integer pmax) and the
+    emitted tokens match the single-device session bit for bit."""
+    from repro.models import build_model
+    from repro.models.common import ArchConfig
+    from repro.processes.lm import DecodeSession
+
+    cfg = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=16,
+                     n_heads=2, n_kv_heads=2, d_ff=32, vocab=48, remat=False,
+                     dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    B, steps = 4, 5
+    prompts = np.asarray(
+        np.random.default_rng(7).integers(0, cfg.vocab, (B, 4)), np.int32)
+
+    def _drive(app):
+        sess = DecodeSession(app, model, params, batch=B, max_len=32)
+        sess.prefill(prompts)
+        toks = [sess.tokens().copy()]
+        for _ in range(steps):
+            sess.step()
+            toks.append(sess.tokens().copy())
+        return toks
+
+    want = _drive(CLapp().init(device_traits=DeviceTraits(count=1)))
+    got = _drive(CLapp().init(model_axis=4))
+    for i, (w, g) in enumerate(zip(want, got)):
+        np.testing.assert_array_equal(g, w, err_msg=f"step {i}")
+
+
+@needs_8_devices
+def test_sharded_ckpt_2d_roundtrip_and_elastic(rng, tmp_path):
+    """Gather-free checkpointing on a real (2, 4) mesh: the save writes one
+    shard blob per device holding only the UNIQUE pieces it owns (no host
+    gather — asserted via the profile's phase records), the same-mesh
+    restore device_puts pieces straight to their targets, and the elastic
+    fallback reassembles on the host for a single device and for a
+    DIFFERENT (4, 2) mesh shape — always matching the host-gather oracle
+    bit for bit."""
+    from repro.ckpt import restore_checkpoint, save_checkpoint
+    from repro.core import ProfileParameters
+    from repro.launch.mesh import make_data_mesh
+
+    app = CLapp().init(model_axis=4)
+    mesh = app.mesh
+    NS, P = jax.sharding.NamedSharding, jax.sharding.PartitionSpec
+    shardings = {
+        "rows": NS(mesh, P("data")),            # 2 unique pieces
+        "cols": NS(mesh, P(None, "model")),     # 4 unique pieces
+        "rep": NS(mesh, P()),                   # replicated -> host.arena
+    }
+    host_state = {
+        "rows": rng.standard_normal((4, 8)).astype(np.float32),
+        "cols": rng.standard_normal((3, 8)).astype(np.float32),
+        "rep": rng.standard_normal((5,)).astype(np.float32),
+    }
+    state = {k: jax.device_put(v, shardings[k]) for k, v in host_state.items()}
+    state["step_count"] = np.int32(41)          # non-Array leaf rides host.arena
+    oracle = jax.tree.map(np.asarray, state)    # the host-gather oracle
+
+    prof = ProfileParameters(enable=True)
+    path = save_checkpoint(str(tmp_path), 41, state, sharded=True,
+                           profile=prof)
+    assert prof.phase_total("gather") == 0.0, "sharded save must never gather"
+    assert prof.phase_total("shard_write") > 0
+    import os as _os
+    shard_files = [n for n in _os.listdir(path) if n.startswith("shard_")]
+    assert 2 <= len(shard_files) <= 8, shard_files
+
+    like = jax.tree.map(lambda a: np.zeros(np.shape(a), np.asarray(a).dtype),
+                        oracle)
+
+    # same-mesh restore: direct per-device placement, zero gather
+    prof2 = ProfileParameters(enable=True)
+    back = restore_checkpoint(str(tmp_path), like,
+                              shardings={**shardings, "step_count": None},
+                              profile=prof2)
+    assert prof2.phase_total("gather") == 0.0, \
+        "same-shape restore must device_put shards directly"
+    for k in ("rows", "cols", "rep"):
+        assert back[k].sharding.is_equivalent_to(shardings[k], back[k].ndim)
+        np.testing.assert_array_equal(np.asarray(back[k]), oracle[k],
+                                      err_msg=k)
+    np.testing.assert_array_equal(back["step_count"], oracle["step_count"])
+
+    # elastic restore 1: everything onto ONE device
+    single = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    prof3 = ProfileParameters(enable=True)
+    back1 = restore_checkpoint(
+        str(tmp_path), like,
+        shardings={k: single for k in shardings} | {"step_count": None},
+        profile=prof3)
+    assert prof3.phase_total("gather") > 0, "elastic path reassembles on host"
+    for k in ("rows", "cols", "rep"):
+        assert set(back1[k].devices()) == {jax.devices()[0]}
+        np.testing.assert_array_equal(np.asarray(back1[k]), oracle[k],
+                                      err_msg=f"single[{k}]")
+
+    # elastic restore 2: a DIFFERENT 2D mesh shape (4, 2)
+    mesh42 = make_data_mesh(jax.devices(), model=2)
+    sh42 = {"rows": NS(mesh42, P("data")), "cols": NS(mesh42, P(None, "model")),
+            "rep": NS(mesh42, P()), "step_count": None}
+    back2 = restore_checkpoint(str(tmp_path), like, shardings=sh42)
+    for k in ("rows", "cols", "rep"):
+        assert back2[k].sharding.is_equivalent_to(sh42[k], back2[k].ndim)
+        np.testing.assert_array_equal(np.asarray(back2[k]), oracle[k],
+                                      err_msg=f"mesh42[{k}]")
